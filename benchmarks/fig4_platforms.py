@@ -1,0 +1,19 @@
+"""Fig. 4 — YOLOv3 fps across platforms (NVDLA / Rocket / Xeon / Titan Xp)."""
+from __future__ import annotations
+
+from repro.core import platform_table
+
+
+def run() -> list[tuple]:
+    t = platform_table()
+    rows = [("fig4/" + k.replace(" ", "_"), round(v, 4), "fps")
+            for k, v in t.items() if k != "_meta"]
+    m = t["_meta"]
+    rows += [
+        ("fig4/nvdla_accel_ms", round(m["nvdla_accel_ms"], 2), "paper: 67"),
+        ("fig4/nvdla_cpu_ms", round(m["nvdla_cpu_ms"], 2), "paper: 66"),
+        ("fig4/speedup_vs_rocket", round(m["speedup_vs_rocket"], 1),
+         "paper: 407"),
+        ("fig4/gops_per_frame", round(m["gops"], 2), "paper: 66"),
+    ]
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 5 — NVDLA speedup from sharing the LLC (size x block-size grid)."""
+from __future__ import annotations
+
+from repro.core import llc_sweep
+
+PAPER_ANCHORS = {
+    (0.5, 64): 1.17, (64, 64): 1.28,
+    (1024, 32): 1.01, (1024, 64): 1.25, (1024, 128): 1.51,
+    (4096, 128): 1.56,
+}
+
+
+def run() -> list[tuple]:
+    sw = llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
+                   blocks=(32, 64, 128))
+    rows = [("fig5/no_llc_ms", round(sw["no_llc_s"] * 1e3, 2), "baseline")]
+    for (size, block), sp in sorted(sw["grid"].items()):
+        paper = PAPER_ANCHORS.get((size, block))
+        note = f"paper: {paper}" if paper else ""
+        rows.append((f"fig5/llc_{size}KiB_{block}B", round(sp, 3), note))
+    return rows

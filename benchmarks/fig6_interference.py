@@ -1,0 +1,17 @@
+"""Fig. 6 — NVDLA slowdown under BwWrite co-runners (WSS x #cores)."""
+from __future__ import annotations
+
+from repro.core import interference_sweep
+
+PAPER = {("llc", 4): 2.1, ("dram", 4): 2.5}
+
+
+def run() -> list[tuple]:
+    sw = interference_sweep()
+    rows = []
+    for wss in ("l1", "llc", "dram"):
+        for n, v in sorted(sw[wss].items()):
+            paper = PAPER.get((wss, n))
+            note = f"paper: {paper}" if paper else ""
+            rows.append((f"fig6/{wss}_x{n}", round(v, 3), note))
+    return rows

@@ -1,0 +1,79 @@
+"""Roofline report: aggregates the dry-run artifacts into the per-cell
+three-term table (EXPERIMENTS.md section Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__),
+                         "../experiments/artifacts/dryrun")
+
+
+def load_cells(mesh: str = "pod") -> list[dict]:
+    d = os.path.join(ARTIFACTS, mesh)
+    if not os.path.isdir(d):
+        return []
+    cells = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[tuple]:
+    rows = []
+    for mesh in ("pod", "multipod"):
+        cells = load_cells(mesh)
+        n_ok = sum(1 for c in cells if "roofline" in c)
+        n_skip = sum(1 for c in cells if "skipped" in c)
+        n_err = sum(1 for c in cells if "error" in c)
+        rows.append((f"roofline/{mesh}_cells_ok", n_ok, ""))
+        rows.append((f"roofline/{mesh}_cells_skipped", n_skip, "documented"))
+        rows.append((f"roofline/{mesh}_cells_failed", n_err, "must be 0"))
+        for c in cells:
+            if "roofline" not in c:
+                continue
+            r = c["roofline"]
+            tag = f"roofline/{mesh}/{c['arch']}/{c['shape']}"
+            rows.append((tag + "/dominant", r["dominant"], ""))
+            rows.append((tag + "/compute_s", round(r["compute_s"], 5), ""))
+            rows.append((tag + "/memory_s", round(r["memory_s"], 5), ""))
+            rows.append((tag + "/collective_s", round(r["collective_s"], 5), ""))
+            rows.append((tag + "/roofline_fraction",
+                         round(r["roofline_fraction"], 4), ""))
+    return rows
+
+
+def table(mesh: str = "pod") -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    cells = load_cells(mesh)
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | roofline frac | MODEL/HLO flops | HBM fit |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skipped: {c['skipped'][:40]}… | — | — | — |")
+            continue
+        if "error" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        temp = mem.get("temp_bytes", 0) / 2**30
+        args = mem.get("argument_bytes", 0) / 2**30
+        fit = "yes" if (temp + args) < 16 else f"NO ({temp + args:.0f}GiB)"
+        ratio = c.get("model_flops_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{ratio:.2f} | {fit} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table("pod"))

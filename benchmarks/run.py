@@ -1,0 +1,44 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,value,note`` CSV.  ``python -m benchmarks.run [--only fig5]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import fig4_platforms, fig5_llc, fig6_interference
+from benchmarks import kernel_bench, roofline
+
+SUITES = {
+    "fig4": fig4_platforms.run,
+    "fig5": fig5_llc.run,
+    "fig6": fig6_interference.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES))
+    args = ap.parse_args()
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    print("name,value,note")
+    failed = 0
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+        except Exception as e:  # keep the suite going, flag at exit
+            failed += 1
+            print(f"{name}/ERROR,{type(e).__name__},{e}", file=sys.stderr)
+        print(f"_meta/{name}_seconds,{time.time()-t0:.1f},")
+    if failed:
+        raise SystemExit(f"{failed} suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Batched serving driver — the inference-engine shape of the paper.
+
+NVDLA is an inference offload engine behind a shared memory system; the
+LM-serving analogue is a batched prefill+decode engine whose caches are
+the memory-system residents.  This driver serves batched requests against
+any assigned architecture and reports prefill/decode token throughput.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.data.synthetic import make_batch
+from repro.models import init_params
+from repro.serve import ServeEngine
+from repro.types import param_values
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = param_values(init_params(jax.random.PRNGKey(0), cfg))
+    eng = ServeEngine(cfg, params,
+                      cache_len=args.prompt_len + args.max_new + 8,
+                      eos_id=0, temperature=args.temperature)
+
+    batch = make_batch(cfg, args.batch, args.prompt_len, seed=1)
+    batch.pop("labels")
+
+    t0 = time.perf_counter()
+    res = eng.generate(batch, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    total_new = int(res.lengths.sum())
+    print(f"arch={cfg.name}  batch={args.batch}  prompt={args.prompt_len}")
+    print(f"generated {total_new} tokens in {res.steps} steps, {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s incl. compile)")
+    # steady-state decode rate (second call, compiled)
+    t0 = time.perf_counter()
+    res = eng.generate(batch, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    print(f"steady-state: {int(res.lengths.sum())/dt:.1f} tok/s")
+    print("sample rows:", res.tokens[:2, :10].tolist())
+
+
+if __name__ == "__main__":
+    main()

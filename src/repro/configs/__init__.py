@@ -1,0 +1,43 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+All ten assigned architectures plus the paper's own workload config
+(``nvdla-yolov3``, consumed by ``repro.core``).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+    pad_to,
+)
+
+_ARCH_MODULES = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).smoke_config()

@@ -1,0 +1,21 @@
+"""The paper's primary contribution: NVDLA integrated into an SoC with a
+configurable shared memory hierarchy under FAME-1 token simulation.
+
+Subsystems (see DESIGN.md section 2 for the TPU/JAX adaptation map):
+* ``yolov3``       — the benchmark network descriptor (66 GOP / frame);
+* ``runtime``      — command-stream compiler (accel/CPU split, tiling);
+* ``quant``        — int8 calibration for the accelerated path;
+* ``accelerator``  — NVDLA nv_large timing model behind the shared LLC;
+* ``cache``        — exact set-associative LLC simulator (runtime-config);
+* ``dram``         — bank/row DRAM timing model;
+* ``fame1``        — token-based target-clock decoupling combinators;
+* ``interference`` — BwWrite co-runner perturbations;
+* ``soc``          — composition + the paper's three experiments.
+"""
+from repro.core.soc import (  # noqa: F401
+    SoCConfig,
+    interference_sweep,
+    llc_sweep,
+    platform_table,
+    run_yolov3,
+)

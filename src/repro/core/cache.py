@@ -1,0 +1,78 @@
+"""Set-associative LLC simulator — exact, vectorized, runtime-configurable.
+
+The FireSim LLC model is runtime-configurable in sets/ways/block size
+without an FPGA rebuild; this is the same knob set, as a pure-JAX
+``lax.scan`` over an access trace (so it jit-compiles once per geometry
+and is differentiably composable with the rest of the stack if needed).
+
+State is (tags, age) of shape (sets, ways); each access updates one set
+with true LRU.  Used two ways:
+* exactly, on unit-test traces and on sampled windows of the NVDLA DBB
+  stream (the per-stream hit rates feed the accelerator timing model);
+* as the reference that validates the closed-form stream-locality model
+  in ``repro.core.accelerator`` (sequential-burst hit rate = 1 - 32/B).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LLCConfig:
+    size_bytes: int = 2 * 1024 * 1024
+    ways: int = 8
+    block_bytes: int = 64
+
+    @property
+    def sets(self) -> int:
+        return max(1, self.size_bytes // (self.ways * self.block_bytes))
+
+
+def block_address(byte_addr, block_bytes: int):
+    return byte_addr // block_bytes
+
+
+@functools.partial(jax.jit, static_argnames=("sets", "ways"))
+def simulate_trace(block_addrs: jax.Array, *, sets: int, ways: int):
+    """block_addrs (T,) int32 -> hits (T,) bool. True-LRU, allocate-on-miss
+    (writes allocate too — NVDLA's DBB read/write bursts both fill)."""
+    set_idx = block_addrs % sets
+    tag = block_addrs // sets
+
+    def step(carry, inp):
+        tags, age = carry                   # (sets, ways) each
+        s, t = inp
+        row_tags = tags[s]
+        row_age = age[s]
+        match = row_tags == t
+        hit = jnp.any(match)
+        way = jnp.where(hit, jnp.argmax(match), jnp.argmax(row_age))
+        row_tags = row_tags.at[way].set(t)
+        # true LRU: touched way -> age 0, everything else in the set +1
+        row_age = jnp.where(jnp.arange(ways) == way, 0, row_age + 1)
+        tags = tags.at[s].set(row_tags)
+        age = age.at[s].set(row_age)
+        return (tags, age), hit
+
+    init = (jnp.full((sets, ways), -1, jnp.int32),
+            jnp.zeros((sets, ways), jnp.int32))
+    _, hits = jax.lax.scan(step, init, (set_idx, tag))
+    return hits
+
+
+def hit_rate(block_addrs, cfg: LLCConfig) -> float:
+    hits = simulate_trace(jnp.asarray(block_addrs, jnp.int32),
+                          sets=cfg.sets, ways=cfg.ways)
+    return float(jnp.mean(hits.astype(jnp.float32)))
+
+
+def sequential_burst_trace(n_bursts: int, burst_bytes: int,
+                           block_bytes: int, base: int = 0) -> jnp.ndarray:
+    """Byte-sequential stream of `burst_bytes` bursts -> block addresses
+    (the NVDLA weight/ifmap streaming pattern)."""
+    byte_addrs = base + jnp.arange(n_bursts) * burst_bytes
+    return block_address(byte_addrs, block_bytes).astype(jnp.int32)

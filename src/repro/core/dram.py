@@ -1,0 +1,65 @@
+"""DRAM timing model: banks, open rows, FR-FCFS-style row-hit priority.
+
+Matches the FireSim memory-model knobs the paper uses (DDR3, 4 ranks x 8
+banks, FR-FCFS): per access the latency is
+
+    row hit   -> tCAS
+    row miss  -> tRP + tRCD + tCAS        (precharge + activate + CAS)
+
+simulated exactly with a ``lax.scan`` carrying the open row per bank.
+FR-FCFS's *scheduling* effect (row hits served first under load) and
+inter-master contention are modeled at the queue level in
+``repro.core.interference`` — this module is the deterministic service
+-time component.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMConfig:
+    banks: int = 32                  # 4 ranks x 8 banks
+    row_bytes: int = 2048
+    t_cas_cycles: int = 14           # DDR3-1600-ish, in memory-clock cycles
+    t_rcd_cycles: int = 14
+    t_rp_cycles: int = 14
+    clock_hz: float = 800e6          # memory controller clock
+    bus_bytes_per_cycle: int = 16    # 64-bit DDR -> 16 B / controller cycle
+
+    @property
+    def peak_bw(self) -> float:
+        return self.clock_hz * self.bus_bytes_per_cycle
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def access_latencies(byte_addrs: jax.Array, *, banks: int, row_bytes: int,
+                     t_cas: int, t_rcd: int, t_rp: int):
+    """byte_addrs (T,) -> per-access latency in memory cycles (exact
+    open-row bookkeeping; no queueing)."""
+    row = byte_addrs // row_bytes
+    bank = row % banks
+    row_of_bank = row // banks
+
+    def step(open_rows, inp):
+        b, r = inp
+        hit = open_rows[b] == r
+        lat = jnp.where(hit, t_cas, t_rp + t_rcd + t_cas)
+        return open_rows.at[b].set(r), lat
+
+    init = jnp.full((banks,), -1, jnp.int64)
+    _, lats = jax.lax.scan(step, init,
+                           (bank.astype(jnp.int32), row_of_bank))
+    return lats
+
+
+def row_hit_rate(byte_addrs, cfg: DRAMConfig) -> float:
+    lats = access_latencies(
+        jnp.asarray(byte_addrs, jnp.int64), banks=cfg.banks,
+        row_bytes=cfg.row_bytes, t_cas=cfg.t_cas_cycles,
+        t_rcd=cfg.t_rcd_cycles, t_rp=cfg.t_rp_cycles)
+    return float(jnp.mean((lats == cfg.t_cas_cycles).astype(jnp.float32)))

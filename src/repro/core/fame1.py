@@ -1,0 +1,149 @@
+"""FAME-1 token-based target-clock decoupling, as a JAX combinator.
+
+FireSim turns target RTL into a token simulator: every component consumes
+one input token and produces one output token per *target* cycle, and is
+stalled (clock-gated) on host cycles where a token is unavailable — the
+paper's contribution is the Chisel pass that applies this to NVDLA's
+Verilog via clock gating (Fig. 3b).
+
+The JAX analogue: a target-cycle step function ``f(state, x) -> (state,
+y)`` is wrapped so a *host* schedule of token-valid bits drives it.  On a
+host cycle with no token the state passes through unchanged — clock
+gating is ``lax.select`` (Fig. 3b's mux, literally).  The defining FAME-1
+property — target-visible behaviour is bit-identical for every stall
+pattern — holds by construction and is property-tested with randomized
+schedules (tests/test_fame1.py).
+
+``FAME1Pipeline`` chains components through single-entry token queues,
+the shape of the paper's Figure 2 (NVDLA -> front bus -> LLC/DRAM model),
+where a downstream stall (e.g. the memory model waiting on host DRAM)
+back-pressures upstream components exactly as FireSim's channels do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _select_tree(pred, new, old):
+    return jax.tree.map(
+        lambda a, b: jax.lax.select(
+            jax.lax.broadcast(pred, a.shape) if a.ndim else pred, a, b),
+        new, old)
+
+
+def fame1_wrap(step_fn: Callable):
+    """f(state, x) -> (state, y)  ==>  h((state,), (x, valid)) which holds
+    state and emits an invalid token when `valid` is False."""
+
+    def host_step(state, inp):
+        x, valid = inp
+        new_state, y = step_fn(state, x)
+        state = _select_tree(valid, new_state, state)
+        return state, (y, valid)
+
+    return host_step
+
+
+def run_hosted(step_fn, init_state, tokens, valid_mask):
+    """Run `step_fn` under a host schedule.
+
+    tokens: (H, ...) per-host-cycle input (entries where valid_mask is
+    False are ignored); valid_mask: (H,) bool.  Returns (final_state,
+    outputs (T, ...)) where T = number of valid host cycles — i.e. the
+    *target*-cycle view, independent of the stall pattern.
+    """
+    hosted = fame1_wrap(step_fn)
+    final, (ys, valids) = jax.lax.scan(hosted, init_state,
+                                       (tokens, valid_mask))
+    # compact to target cycles: stable order of the valid outputs
+    order = jnp.argsort(~valids, stable=True)
+    n_valid = jnp.sum(valids)
+    compacted = jax.tree.map(lambda y: y[order], ys)
+    return final, compacted, n_valid
+
+
+@dataclasses.dataclass
+class Component:
+    """A FAME-1-transformed target component."""
+    name: str
+    step_fn: Callable                    # (state, x) -> (state, y)
+    init_state: Any
+    init_output: Any                     # token value emitted before any input
+
+
+class FAME1Pipeline:
+    """Chain of components with single-slot token channels between them.
+
+    Each host cycle: component i fires iff its input channel holds a token
+    and its output channel is empty (downstream consumed).  An external
+    stall pattern may additionally gate any component — simulating host
+    non-determinism (DRAM delays, FPGA stalls).  Target behaviour is
+    invariant to that pattern (the FAME-1 guarantee).
+    """
+
+    def __init__(self, components: list[Component]):
+        self.components = components
+
+    def run(self, inputs, host_stalls=None, max_host_cycles: int | None = None):
+        """inputs: (T, ...) source tokens.  host_stalls: (H, n_components)
+        bool — True = stall that component that cycle."""
+        n = len(self.components)
+        t_total = jax.tree.leaves(inputs)[0].shape[0]
+        h_total = max_host_cycles or (4 * t_total * (n + 1))
+        if host_stalls is None:
+            host_stalls = jnp.zeros((h_total, n), bool)
+        h_total = host_stalls.shape[0]
+
+        comp_states = tuple(c.init_state for c in self.components)
+        # channel i feeds component i; channel n collects the sink.
+        # channel 0 carries SOURCE tokens: initialise from the input type.
+        chan_vals = (jax.tree.map(lambda a: jnp.zeros_like(a[0]), inputs),
+                     ) + tuple(c.init_output for c in self.components)
+        chan_full = jnp.zeros((n + 1,), bool)
+        out_buf = jax.tree.map(
+            lambda y: jnp.zeros((t_total,) + jnp.shape(y),
+                                jnp.result_type(y)),
+            self.components[-1].init_output)
+
+        def host_cycle(carry, stalls):
+            states, chans, full, src_idx, out_idx, outs = carry
+            # source: push next input token into channel 0 when empty
+            can_push = (~full[0]) & (src_idx < t_total)
+            tok = jax.tree.map(lambda a: a[jnp.minimum(src_idx, t_total - 1)],
+                               inputs)
+            chans = (_select_tree(can_push, tok, chans[0]),) + chans[1:]
+            full = full.at[0].set(full[0] | can_push)
+            src_idx = src_idx + can_push.astype(jnp.int32)
+
+            new_states = []
+            for i, comp in enumerate(self.components):
+                fire = full[i] & (~full[i + 1]) & (~stalls[i])
+                s_new, y = comp.step_fn(states[i], chans[i])
+                new_states.append(_select_tree(fire, s_new, states[i]))
+                chans = chans[: i + 1] + (
+                    _select_tree(fire, y, chans[i + 1]),) + chans[i + 2:]
+                full = full.at[i].set(full[i] & ~fire)
+                full = full.at[i + 1].set(full[i + 1] | fire)
+            # sink: drain channel n
+            drain = full[n]
+            outs = jax.tree.map(
+                lambda buf, v: jax.lax.select(
+                    drain,
+                    jax.lax.dynamic_update_index_in_dim(
+                        buf, jnp.expand_dims(v, 0).astype(buf.dtype),
+                        jnp.minimum(out_idx, t_total - 1), 0),
+                    buf),
+                outs, chans[n])
+            full = full.at[n].set(False)
+            out_idx = out_idx + drain.astype(jnp.int32)
+            return (tuple(new_states), chans, full, src_idx, out_idx, outs), None
+
+        carry = (comp_states, chan_vals, chan_full,
+                 jnp.int32(0), jnp.int32(0), out_buf)
+        (states, _, _, _, out_idx, outs), _ = jax.lax.scan(
+            host_cycle, carry, host_stalls)
+        return states, outs, out_idx

@@ -1,0 +1,32 @@
+"""INT8 symmetric quantization for the accelerated path.
+
+NVDLA computes conv/FC in int8 with per-channel weight scales (the
+"calibration table" the NVDLA compiler produces); the CPU-side layers run
+fp32 — the fp<->int conversions at the boundary are exactly the ones the
+paper attributes to the processor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def calibrate(x: jax.Array, axis=None) -> jax.Array:
+    """Symmetric amax calibration -> scale (per-`axis` or scalar)."""
+    amax = jnp.max(jnp.abs(x)) if axis is None else \
+        jnp.max(jnp.abs(x), axis=axis)
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_conv_weights(w: jax.Array):
+    """w (KH, KW, Cin, Cout) fp32 -> (int8, per-output-channel scale)."""
+    scale = calibrate(w, axis=(0, 1, 2))            # (Cout,)
+    return quantize(w, scale[None, None, None, :]), scale

@@ -1,0 +1,149 @@
+"""SoC composition + the paper's three experiments as callable drivers.
+
+Mirrors Figure 2: quad-core CPU + NVDLA behind a front-bus arbiter into a
+shared LLC + DRAM.  The CPU-side cost model covers exactly the layers the
+paper runs on the cores (upsample, routes, YOLO heads, fp<->int casts,
+OpenMP across 4 in-order cores).
+
+Drivers:
+* ``run_yolov3``        — one frame; per-layer cycles, accel/cpu split, fps
+                          (paper baseline: 67 ms accel + 66 ms CPU = 7.5 fps);
+* ``llc_sweep``         — Fig. 5: speedup vs no-LLC over size x block;
+* ``interference_sweep``— Fig. 6: slowdown vs #BwWrite co-runners x WSS;
+* ``platform_table``    — Fig. 4: fps on NVDLA / 4xRocket / Xeon / TitanXp.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import yolov3
+from repro.core.accelerator import (
+    AccelConfig,
+    MemSystemConfig,
+    accel_time_s,
+)
+from repro.core.cache import LLCConfig
+from repro.core.interference import with_corunners
+from repro.core.runtime import CommandStream, compile_network
+
+
+@dataclasses.dataclass(frozen=True)
+class CpuConfig:
+    cores: int = 4
+    freq_hz: float = 3.2e9
+    # calibrated to the paper's measured 66 ms CPU share per frame
+    # (darknet's scalar fp conversions / upsample / yolo loops on
+    # in-order single-issue Rocket cores)
+    elements_per_cycle_per_core: float = 0.0072
+
+
+@dataclasses.dataclass(frozen=True)
+class SoCConfig:
+    accel: AccelConfig = AccelConfig()
+    mem: MemSystemConfig = MemSystemConfig()
+    cpu: CpuConfig = CpuConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameReport:
+    accel_s: float
+    cpu_s: float
+    detail: dict
+
+    @property
+    def frame_s(self) -> float:
+        return self.accel_s + self.cpu_s
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.frame_s
+
+
+def cpu_time_s(stream: CommandStream, cpu: CpuConfig) -> float:
+    elems = sum(op.elements for op in stream.cpu_ops)
+    rate = cpu.cores * cpu.freq_hz * cpu.elements_per_cycle_per_core
+    return elems / rate
+
+
+def run_yolov3(soc: SoCConfig = SoCConfig(), *, co_runners: int = 0,
+               wss: str = "l1") -> FrameReport:
+    stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
+    mem = with_corunners(soc.mem, co_runners, wss)
+    accel = accel_time_s(stream, soc.accel, mem)
+    cpu_s = cpu_time_s(stream, soc.cpu)
+    return FrameReport(accel_s=accel["seconds"], cpu_s=cpu_s,
+                       detail={"accel": accel, "stream": stream})
+
+
+# --------------------------------------------------------------------------
+# Fig. 5 — LLC sweep
+# --------------------------------------------------------------------------
+def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
+              blocks=(32, 64, 128), soc: SoCConfig = SoCConfig()) -> dict:
+    """Speedup of the NVDLA-side time vs a no-LLC design."""
+    stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
+    base = accel_time_s(stream, soc.accel,
+                        dataclasses.replace(soc.mem, llc=None))["seconds"]
+    out = {"no_llc_s": base, "grid": {}}
+    for block in blocks:
+        for size in sizes_kib:
+            ways = min(8, max(1, int(size * 1024 // block)))
+            llc = LLCConfig(size_bytes=int(size * 1024), ways=ways,
+                            block_bytes=block)
+            mem = dataclasses.replace(soc.mem, llc=llc)
+            t = accel_time_s(stream, soc.accel, mem)["seconds"]
+            out["grid"][(size, block)] = base / t
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fig. 6 — interference sweep
+# --------------------------------------------------------------------------
+def interference_sweep(soc: SoCConfig = SoCConfig(),
+                       corunners=(0, 1, 2, 3, 4)) -> dict:
+    solo = run_yolov3(soc).accel_s
+    out = {}
+    for wss in ("l1", "llc", "dram"):
+        out[wss] = {n: run_yolov3(soc, co_runners=n, wss=wss).accel_s / solo
+                    for n in corunners}
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fig. 4 — platform comparison
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    peak_flops: float
+    efficiency: float          # sustained fraction on darknet fp32
+    source: str
+
+    def fps(self, gops: float) -> float:
+        return (self.peak_flops * self.efficiency) / (gops * 1e9)
+
+
+def platform_table(soc: SoCConfig = SoCConfig()) -> dict:
+    gops = yolov3.total_gops()
+    nvdla = run_yolov3(soc)
+    platforms = [
+        # 4 in-order single-issue cores, scalar fp32 darknet: calibrated to
+        # the paper's 407x NVDLA speedup claim
+        Platform("4x rocket (fp32)", 4 * 3.2e9 * 2, 0.0468,
+                 "calibrated: paper's 407x"),
+        # 2-socket Xeon E5-2658v3: 24C/48T AVX2 @2.2GHz = 1.7 TFLOP fp32
+        Platform("xeon e5-2658v3 x2 (fp32)", 1.69e12, 0.078,
+                 "estimated from paper Fig. 4 bar (~2 fps)"),
+        # Titan Xp: 12.15 TFLOP fp32; paper measured 41 fps
+        Platform("titan xp (fp32)", 12.15e12, 0.222,
+                 "calibrated: paper's 41 fps"),
+    ]
+    table = {"nvdla (int8)": nvdla.fps}
+    table.update({p.name: p.fps(gops) for p in platforms})
+    table["_meta"] = {
+        "gops": gops,
+        "nvdla_accel_ms": nvdla.accel_s * 1e3,
+        "nvdla_cpu_ms": nvdla.cpu_s * 1e3,
+        "speedup_vs_rocket": table["nvdla (int8)"] / table["4x rocket (fp32)"],
+    }
+    return table

@@ -1,0 +1,97 @@
+"""Token-level SoC memory pipeline — the paper's Figure 2, executable.
+
+Composes the exact LLC simulator and the DRAM row/bank model as FAME-1
+components behind the NVDLA DBB: each *target* cycle one DBB burst
+address flows  DBB -> LLC (hit/miss classification, LRU update) ->
+DRAM (row hit/miss service latency for LLC misses).  Host stalls may gate
+any component on any host cycle (FireSim's situation when the host FPGA's
+DRAM is slow) — the per-access latencies and every cache/bank state are
+bit-identical regardless (tests/test_socsim.py, with Hypothesis).
+
+This is the mechanism layer under ``repro.core.accelerator``'s closed-form
+timing: where the closed form aggregates streams statistically, this
+pipeline replays an actual burst trace cycle by cycle.  Used for (a)
+validating the closed form on real layer traces and (b) demonstrating
+FAME-1 semantics on the paper's own topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import LLCConfig
+from repro.core.dram import DRAMConfig
+from repro.core.fame1 import Component, FAME1Pipeline
+
+
+def llc_component(cfg: LLCConfig) -> Component:
+    sets, ways = cfg.sets, cfg.ways
+
+    def step(state, addr):
+        tags, age = state
+        block = addr // cfg.block_bytes
+        s = (block % sets).astype(jnp.int32)
+        t = block // sets
+        row_tags = tags[s]
+        row_age = age[s]
+        match = row_tags == t
+        hit = jnp.any(match)
+        way = jnp.where(hit, jnp.argmax(match), jnp.argmax(row_age))
+        tags = tags.at[s, way].set(t)
+        age = age.at[s].set(jnp.where(jnp.arange(ways) == way, 0,
+                                      row_age + 1))
+        return (tags, age), {"addr": addr, "hit": hit}
+
+    init = (jnp.full((sets, ways), -1, jnp.int64),
+            jnp.zeros((sets, ways), jnp.int32))
+    return Component("llc", step, init,
+                     {"addr": jnp.int64(0), "hit": jnp.bool_(False)})
+
+
+def dram_component(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
+                   t_llc_hit: int = 20) -> Component:
+    banks = dram_cfg.banks
+
+    def step(open_rows, tok):
+        addr, hit = tok["addr"], tok["hit"]
+        row = addr // dram_cfg.row_bytes
+        bank = (row % banks).astype(jnp.int32)
+        row_of_bank = row // banks
+        row_hit = open_rows[bank] == row_of_bank
+        dram_lat = jnp.where(
+            row_hit, dram_cfg.t_cas_cycles,
+            dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles
+            + dram_cfg.t_cas_cycles)
+        # a miss pays the LLC lookup AND the DRAM access
+        lat = jnp.where(hit, t_llc_hit, t_llc_hit + dram_lat).astype(jnp.int32)
+        # only LLC misses touch DRAM state (no row activation on a hit)
+        open_rows = jnp.where(
+            hit, open_rows, open_rows.at[bank].set(row_of_bank))
+        return open_rows, lat
+
+    return Component("dram", step, jnp.full((banks,), -1, jnp.int64),
+                     jnp.int32(0))
+
+
+@dataclasses.dataclass
+class MemPipelineResult:
+    latencies: jax.Array     # (T,) per-access service latency
+    total_cycles: jax.Array  # sum
+
+
+def simulate_dbb_stream(byte_addrs, llc_cfg: LLCConfig,
+                        dram_cfg: DRAMConfig | None = None,
+                        host_stalls=None) -> MemPipelineResult:
+    """Replay a DBB burst-address trace through the LLC -> DRAM pipeline."""
+    dram_cfg = dram_cfg or DRAMConfig()
+    addrs = jnp.asarray(byte_addrs, jnp.int64)
+    pipe = FAME1Pipeline([llc_component(llc_cfg),
+                          dram_component(llc_cfg, dram_cfg)])
+    _, lats, n = pipe.run(addrs, host_stalls=host_stalls,
+                          max_host_cycles=(host_stalls.shape[0]
+                                           if host_stalls is not None else None))
+    t = addrs.shape[0]
+    return MemPipelineResult(latencies=lats[:t],
+                             total_cycles=jnp.sum(lats[:t]))

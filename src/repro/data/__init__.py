@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticStream, make_batch  # noqa: F401

@@ -1,0 +1,100 @@
+"""Deterministic synthetic token pipeline.
+
+Production data loaders are host-sharded: each host materialises only its
+slice of the global batch.  The stream here is (a) *deterministic in
+(seed, step)* — restart/resume yields bit-identical batches, which the
+fault-tolerance tests rely on — and (b) *host-shardable* — a host only
+generates ``[host_offset : host_offset + per_host]`` rows, and any
+(num_hosts, host_id) decomposition yields the same global batch.
+
+Tokens follow a Zipfian-ish distribution (realistic softmax/label traffic,
+exercises the padded-vocab masking) with a learnable bigram structure so
+short training runs have signal: token[t+1] depends on token[t] through a
+fixed random permutation, so a model can reduce loss well below uniform.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _zipf_logits(vocab: int) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    return np.log(1.0 / ranks)
+
+
+def _tokens_for_rows(cfg: ModelConfig, rows: np.ndarray, seq_len: int,
+                     seed: int, step: int) -> np.ndarray:
+    """Generate (len(rows), seq_len+1) tokens deterministically per row."""
+    v = cfg.vocab_size
+    zipf = _zipf_logits(v)
+    zipf_p = np.exp(zipf - zipf.max())
+    zipf_p /= zipf_p.sum()
+    perm = np.random.default_rng(seed ^ 0x5EED).permutation(v)
+    out = np.empty((len(rows), seq_len + 1), dtype=np.int32)
+    for i, r in enumerate(rows):
+        rng = np.random.default_rng((seed * 1_000_003 + step) * 1_000_003 + int(r))
+        toks = rng.choice(v, size=seq_len + 1, p=zipf_p)
+        # bigram structure: with p=0.5 the next token is perm[prev]
+        follow = rng.random(seq_len) < 0.5
+        for t in range(seq_len):
+            if follow[t]:
+                toks[t + 1] = perm[toks[t]]
+        out[i] = toks
+    return out
+
+
+@dataclasses.dataclass
+class SyntheticStream:
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def per_host(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+    def batch_at(self, step: int) -> dict:
+        rows = np.arange(self.host_id * self.per_host,
+                         (self.host_id + 1) * self.per_host)
+        toks = _tokens_for_rows(self.cfg, rows, self.seq_len, self.seed, step)
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+        _add_frontend_stubs(batch, self.cfg, self.per_host, self.seed, step)
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def _add_frontend_stubs(batch: dict, cfg: ModelConfig, b: int, seed: int,
+                        step: int) -> None:
+    """Audio/vision frontends are stubs: precomputed embeddings."""
+    if cfg.is_encoder_decoder:
+        key = jax.random.PRNGKey(seed * 7919 + step)
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm" and cfg.num_patches:
+        key = jax.random.PRNGKey(seed * 104729 + step + 1)
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.num_patches, cfg.d_model), jnp.float32)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int, *, seed: int = 0,
+               step: int = 0) -> dict:
+    """One-shot batch (tests / examples)."""
+    return SyntheticStream(cfg, batch, seq_len, seed=seed).batch_at(step)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package has:
+* ``kernel.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+* ``ops.py``    — jit'd public wrapper (padding, shape plumbing),
+* ``ref.py``    — pure-jnp oracle the tests sweep against.
+
+Kernels validate in ``interpret=True`` mode on CPU; BlockSpecs are written
+for the real TPU memory hierarchy (HBM -> VMEM -> MXU/VPU).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.convcore.ops import conv2d_int8, matmul_int8  # noqa: F401

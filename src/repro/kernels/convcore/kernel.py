@@ -1,0 +1,89 @@
+"""NVDLA Convolutional Core, re-derived for the TPU MXU.
+
+NVDLA's conv core is 2048 INT8 MACs fed from a 512 KiB convolutional
+buffer; conv and FC layers are lowered to matrix multiplies whose operand
+tiles are staged in that buffer (the "Atomic-C/K" dataflow).  The TPU
+analogue keeps the *insight* — stage int8 operand tiles in fast on-chip
+memory sized so DRAM/HBM traffic is streaming — and swaps the geometry:
+
+* the MXU is a 128x128 systolic array -> block shapes are multiples of
+  128 in M/N and 512 in K (int8 lanes pack 4x denser than f32);
+* the "convolutional buffer" becomes the VMEM working set chosen by the
+  BlockSpecs below: one (bm, bk) activation tile + one (bk, bn) weight
+  tile + the (bm, bn) int32 accumulator;
+* NVDLA's SDP post-processing (bias, per-channel scale, ReLU) is fused
+  into the epilogue on the last K step — output leaves VMEM exactly once.
+
+Default tiling (bm=bk=512, bn=256):  a 512x512 + w 512x256 int8 tiles
+= 384 KiB + acc 512x256 int32 = 512 KiB  ->  ~0.9 MiB of VMEM, i.e. the
+same "conv buffer" budget class as nv_large's 512 KiB, well under the
+~128 MiB/core VMEM target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 512
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _matmul_kernel(a_ref, b_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+                   nk: int, relu: bool):
+    """One (bm, bn) output tile; grid = (nm, nn, nk), k innermost."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 on the MXU
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        out = acc * scale_ref[...] + bias_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "relu", "out_dtype",
+                              "interpret"))
+def matmul_int8_kernel(a: jax.Array, b: jax.Array, scale: jax.Array,
+                       bias: jax.Array, *, bm: int = DEFAULT_BM,
+                       bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                       relu: bool = False, out_dtype=jnp.bfloat16,
+                       interpret: bool = False) -> jax.Array:
+    """a (M, K) int8 @ b (K, N) int8 -> (M, N) out_dtype.
+
+    scale (N,) fp32 per-output-channel dequant scale (s_a * s_w[n]);
+    bias (N,) fp32.  M % bm == K % bk == N % bn == 0 (ops.py pads).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    nm, nn, nk = m // bm, n // bn, k // bk
+    grid = (nm, nn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b, scale.reshape(1, n), bias.reshape(1, n))

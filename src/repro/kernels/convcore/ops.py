@@ -1,0 +1,93 @@
+"""Public convcore ops: padding plumbing + conv-as-GEMM (im2col).
+
+``conv2d_int8`` is the NVDLA conv-layer pipeline on the MXU: im2col the
+int8 activations, run the tiled int8 GEMM kernel with the fused SDP
+epilogue (bias + per-channel scale + ReLU), reshape back to NHWC.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.convcore import kernel as K
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def _pick_block(size: int, preferred: int, quantum: int) -> int:
+    """Largest block <= preferred that is a multiple of `quantum`."""
+    if size <= quantum:
+        return quantum
+    b = min(preferred, size)
+    return max(quantum, (b // quantum) * quantum)
+
+
+def matmul_int8(a: jax.Array, b: jax.Array, scale: jax.Array | None = None,
+                bias: jax.Array | None = None, *, relu: bool = False,
+                out_dtype=jnp.bfloat16, interpret: bool = False,
+                bm: int | None = None, bn: int | None = None,
+                bk: int | None = None) -> jax.Array:
+    """int8 (M, K) @ (K, N) with fused dequant epilogue; any M/N/K."""
+    m0, k0 = a.shape
+    _, n0 = b.shape
+    scale = jnp.ones((n0,), jnp.float32) if scale is None else scale
+    bias = jnp.zeros((n0,), jnp.float32) if bias is None else bias
+
+    bm = bm or _pick_block(m0, K.DEFAULT_BM, 128)
+    bn = bn or _pick_block(n0, K.DEFAULT_BN, 128)
+    bk = bk or _pick_block(k0, K.DEFAULT_BK, 128)
+
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    b, _ = _pad_to(b, 0, bk)
+    b, _ = _pad_to(b, 1, bn)
+    scale, _ = _pad_to(scale, 0, bn)
+    bias, _ = _pad_to(bias, 0, bn)
+
+    out = K.matmul_int8_kernel(a, b, scale, bias, bm=bm, bn=bn, bk=bk,
+                               relu=relu, out_dtype=out_dtype,
+                               interpret=interpret)
+    return out[:m0, :n0]
+
+
+def im2col(x: jax.Array, kh: int, kw: int, *, stride: int = 1,
+           padding: int = 0):
+    """x (N, H, W, C) -> patches (N*H'*W', KH*KW*C), plus (H', W')."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    # gather kh*kw shifted slices; unrolled python loop => static slices
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = x[:, i : i + (ho - 1) * stride + 1 : stride,
+                   j : j + (wo - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    patches = jnp.stack(cols, axis=3)          # (N, H', W', KH*KW, C)
+    return patches.reshape(n * ho * wo, kh * kw * c), (ho, wo)
+
+
+def conv2d_int8(x: jax.Array, w: jax.Array, scale: jax.Array | None = None,
+                bias: jax.Array | None = None, *, stride: int = 1,
+                padding: int = 0, relu: bool = False,
+                out_dtype=jnp.bfloat16, interpret: bool = False) -> jax.Array:
+    """NVDLA conv layer on the MXU. x (N,H,W,C) int8; w (KH,KW,C,O) int8."""
+    n = x.shape[0]
+    kh, kw, c, o = w.shape
+    patches, (ho, wo) = im2col(x, kh, kw, stride=stride, padding=padding)
+    wmat = w.reshape(kh * kw * c, o)
+    out = matmul_int8(patches, wmat, scale, bias, relu=relu,
+                      out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(n, ho, wo, o)

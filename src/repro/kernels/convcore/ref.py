@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the convcore int8 GEMM + fused epilogue."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_int8_ref(a: jax.Array, b: jax.Array, scale: jax.Array,
+                    bias: jax.Array, *, relu: bool = False,
+                    out_dtype=jnp.bfloat16) -> jax.Array:
+    acc = jnp.einsum("mk,kn->mn", a.astype(jnp.int32), b.astype(jnp.int32))
+    out = acc.astype(jnp.float32) * scale[None, :] + bias[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(out_dtype)
+
+
+def conv2d_int8_ref(x: jax.Array, w: jax.Array, scale: jax.Array,
+                    bias: jax.Array, *, stride: int = 1, padding: int = 0,
+                    relu: bool = False, out_dtype=jnp.bfloat16) -> jax.Array:
+    """x (N, H, W, C) int8; w (KH, KW, C, O) int8 -> (N, H', W', O)."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * scale + bias
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(out_dtype)

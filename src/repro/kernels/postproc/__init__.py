@@ -1,0 +1,1 @@
+from repro.kernels.postproc.ops import postprocess  # noqa: F401

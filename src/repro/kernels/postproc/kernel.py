@@ -1,0 +1,72 @@
+"""NVDLA post-processing unit (SDP + PDP) as one fused Pallas pass.
+
+NVDLA streams conv-core output through SDP (bias / per-channel scale /
+activation) and PDP (pooling) before it ever returns to DRAM.  The TPU
+analogue fuses the same chain into one VMEM-resident pass over NHWC
+tiles: each (1, bh, bw, C) activation tile is loaded once, gets
+bias+scale+activation on the VPU, is max-pooled in-register, and only the
+pooled (1, bh/p, bw/p, C) tile is written back — a (1 + 1/p^2)x traffic
+cost instead of the 2x + 2/p^2 of separate passes.
+
+Channel stays the innermost (lane) dimension; bh/bw tile the sublane
+grid.  Pool windows never straddle tiles because bh % pool == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BH = 32
+DEFAULT_BW = 32
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if kind == "tanh":
+        return jnp.tanh(x)
+    return x  # "none"
+
+
+def _postproc_kernel(x_ref, scale_ref, bias_ref, o_ref, *, act: str,
+                     pool: int):
+    x = x_ref[...].astype(jnp.float32)            # (1, bh, bw, C)
+    x = x * scale_ref[...] + bias_ref[...]
+    x = _act(x, act)
+    if pool > 1:
+        _, bh, bw, c = x.shape
+        x = x.reshape(1, bh // pool, pool, bw // pool, pool, c)
+        x = jnp.max(x, axis=(2, 4))
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "pool", "bh", "bw",
+                                             "out_dtype", "interpret"))
+def postprocess_kernel(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+                       act: str = "relu", pool: int = 1,
+                       bh: int = DEFAULT_BH, bw: int = DEFAULT_BW,
+                       out_dtype=jnp.bfloat16,
+                       interpret: bool = False) -> jax.Array:
+    """x (N, H, W, C); scale/bias (C,).  H % bh == W % bw == 0,
+    bh % pool == bw % pool == 0 (ops.py pads)."""
+    n, h, w, c = x.shape
+    grid = (n, h // bh, w // bw)
+    return pl.pallas_call(
+        functools.partial(_postproc_kernel, act=act, pool=pool),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bh, bw, c), lambda b, i, j: (b, i, j, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bh // pool, bw // pool, c),
+                               lambda b, i, j: (b, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // pool, w // pool, c),
+                                       out_dtype),
+        interpret=interpret,
+    )(x, scale.reshape(1, 1, 1, c), bias.reshape(1, 1, 1, c))

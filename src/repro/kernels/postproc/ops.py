@@ -1,0 +1,28 @@
+"""Public postproc op: pad/crop plumbing around the fused kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.postproc import kernel as K
+
+
+def postprocess(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+                act: str = "relu", pool: int = 1, out_dtype=jnp.bfloat16,
+                interpret: bool = False) -> jax.Array:
+    """Fused bias+scale+activation (+maxpool). x (N, H, W, C)."""
+    n, h, w, c = x.shape
+    bh = min(K.DEFAULT_BH, h)
+    bw = min(K.DEFAULT_BW, w)
+    bh = max(pool, (bh // pool) * pool)
+    bw = max(pool, (bw // pool) * pool)
+    ph = (-h) % bh
+    pw = (-w) % bw
+    if ph or pw:
+        # pad with -inf-like value so maxpool ignores the padding
+        pad_val = jnp.asarray(-3e38, x.dtype) if pool > 1 else jnp.asarray(0, x.dtype)
+        x = jnp.pad(x, ((0, 0), (0, ph), (0, pw), (0, 0)),
+                    constant_values=pad_val)
+    out = K.postprocess_kernel(x, scale, bias, act=act, pool=pool, bh=bh,
+                               bw=bw, out_dtype=out_dtype, interpret=interpret)
+    return out[:, : h // pool, : w // pool, :]

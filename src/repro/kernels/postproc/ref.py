@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused post-processing pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if kind == "tanh":
+        return jnp.tanh(x)
+    return x
+
+
+def postprocess_ref(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+                    act: str = "relu", pool: int = 1,
+                    out_dtype=jnp.bfloat16) -> jax.Array:
+    y = x.astype(jnp.float32) * scale[None, None, None, :] \
+        + bias[None, None, None, :]
+    y = _act(y, act)
+    if pool > 1:
+        n, h, w, c = y.shape
+        y = y.reshape(n, h // pool, pool, w // pool, pool, c).max(axis=(2, 4))
+    return y.astype(out_dtype)

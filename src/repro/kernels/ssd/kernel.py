@@ -1,0 +1,90 @@
+"""Mamba-2 SSD intra-chunk kernel (state-space duality, arXiv:2405.21060).
+
+The SSD decomposition splits the linear-recurrence into (a) dense
+intra-chunk matmuls and (b) a cheap inter-chunk state recurrence.  (a) is
+>95% of the FLOPs and is MXU-shaped — this kernel computes, per
+(batch, chunk) grid cell and per head:
+
+    scores(l,s) = (C_l . B_s) * exp(cum_l - cum_s) * dt_s   (causal l >= s)
+    y_intra     = scores @ x                                 (q x q @ q x p)
+    state       = B^T @ (exp(cum_last - cum) * dt * x)       (n x q @ q x p)
+
+The (q, q) score matrix lives only in VMEM/registers — chunk length q
+(default 256) bounds it to 256 KiB fp32, the same working-set discipline
+as the flash-attention kernel.  The inter-chunk scan (b) stays in JAX
+(``repro.models.ssm``): it is O(nc * h * n * p) elementwise work.
+
+VMEM @ q=256, h-loop over 24 heads, p=64, n=128:
+x tile 256*24*64*4 = 1.5 MiB + B/C 256*128*4 = 128 KiB each + per-head
+(q,q)+(q,p)+(n,p) intermediates < 0.4 MiB -> ~2 MiB, MXU dims 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *,
+                q: int, h: int, p: int, n: int):
+    x = x_ref[0, 0]            # (q, h, p) fp32
+    dt = dt_ref[0, 0]          # (q, h)
+    cum = cum_ref[0, 0]        # (q, h)  running sum of dt*A (negative)
+    bmat = b_ref[0, 0]         # (q, n)
+    cmat = c_ref[0, 0]         # (q, n)
+
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+
+    for head in range(h):      # static unroll: one (q,q)@(q,p) MXU op each
+        seg = cum[:, head][:, None] - cum[:, head][None, :]       # (q, q)
+        seg = jnp.where(causal, seg, NEG)
+        scores = cb * jnp.exp(seg) * dt[:, head][None, :]
+        xh = x[:, head, :]                                        # (q, p)
+        y_ref[0, 0, :, head, :] = jax.lax.dot_general(
+            scores, xh, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        w = jnp.exp(cum[-1, head] - cum[:, head]) * dt[:, head]   # (q,)
+        st_ref[0, 0, head] = jax.lax.dot_general(
+            bmat, xh * w[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                   # (n, p)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_kernel(x: jax.Array, dt: jax.Array, cum: jax.Array,
+                           B: jax.Array, C: jax.Array, *,
+                           interpret: bool = False):
+    """x (bb, nc, q, h, p); dt/cum (bb, nc, q, h); B/C (bb, nc, q, n).
+
+    Returns (y_intra (bb, nc, q, h, p), states (bb, nc, h, n, p)), fp32.
+    Single SSM group (g == 1), the mamba2-130m configuration.
+    """
+    bb, nc, q, h, p = x.shape
+    n = B.shape[-1]
+    grid = (bb, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q, h=h, p=p, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, h, p), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h, n, p), lambda i, j: (i, j, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bb, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, cum, B, C)

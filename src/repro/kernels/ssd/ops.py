@@ -1,0 +1,32 @@
+"""Public SSD op: chunking plumbing around the intra-chunk kernel.
+
+``ssd_intra_chunk`` mirrors the dataflow of ``repro.models.ssm.ssd_chunked``
+— the kernel owns the heavy intra-chunk matmuls; the caller composes the
+inter-chunk state scan and D-skip exactly as the pure-jnp path does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as K
+
+
+def ssd_intra_chunk(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array, *, chunk: int,
+                    interpret: bool = False):
+    """x (Bb, L, H, P); dt (Bb, L, H) post-softplus; A (H,) negative;
+    B/C (Bb, L, N) single-group. Returns (y_intra, states, cum) with
+    cum the within-chunk decay prefix the inter-chunk scan needs."""
+    bb, l, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk if l % chunk == 0 and l > chunk else l
+    nc = l // q
+    xc = x.reshape(bb, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bb, nc, q, h).astype(jnp.float32)
+    cum = jnp.cumsum(dtc * A[None, None, None, :], axis=2)
+    bc = B.reshape(bb, nc, q, n).astype(jnp.float32)
+    cc = C.reshape(bb, nc, q, n).astype(jnp.float32)
+    y, states = K.ssd_intra_chunk_kernel(xc, dtc, cum, bc, cc,
+                                         interpret=interpret)
+    return y, states, cum

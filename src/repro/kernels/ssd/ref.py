@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD intra-chunk computation (g == 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x, dt, cum, B, C):
+    """Same contract as the kernel: returns (y_intra, states)."""
+    bb, nc, q, h, p = x.shape
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (bb,nc,l,s,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcln,bcsn->bcls", C, B)                  # (bb,nc,l,s)
+    scores = cb[:, :, :, :, None] * decay * dt[:, :, None, :, :]
+    y = jnp.einsum("bclsh,bcshp->bclhp", scores, x)
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dt                 # (bb,nc,q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", B, w, x)
+    return y, states

@@ -1,0 +1,115 @@
+"""Sliding-window flash attention (banded) for the TPU MXU.
+
+The band structure makes SWA prefill O(S*W): for query block i only the
+kv blocks covering [i*bq - W, i*bq + bq) can contribute.  The grid is
+(batch*heads, n_q_blocks, n_kv_steps) with n_kv_steps = W/bk + 1 — a
+*static* band width — and the kv BlockSpec's index_map slides the window:
+kv block index = clamp(i - W/bk + j).  Out-of-range steps are masked by
+absolute position (the clamp makes them alias block 0, which the mask
+then zeroes, so no double counting).
+
+Online-softmax state (m, l, acc) lives in VMEM scratch across the kv
+steps of one query block; the output tile is written once on the last
+step — the flash policy: no (bq, S) score matrix ever exists in memory.
+
+VMEM @ bq=bk=256, D=128: q/k/v tiles 3*256*128*2B = 192 KiB, acc
+256*128*4B = 128 KiB. MXU dims (bq x D) @ (D x bk) are 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                bq: int, bk: int, nw: int, nk: int, window: int,
+                scale: float, softcap: float):
+    i = pl.program_id(1)   # query block
+    j = pl.program_id(2)   # kv step within the band
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_block = i - nw + j                       # may be negative (clamped
+    in_range = kv_block >= 0                    # in the index_map)
+
+    @pl.when(in_range)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)        # (bq, D)
+        k = k_ref[0].astype(jnp.float32)        # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kv_block * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (qpos >= kpos) & (qpos - kpos < window) & (kpos >= 0)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                     # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                  # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk", "scale",
+                                             "softcap", "interpret"))
+def swa_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         window: int, bq: int = DEFAULT_BQ,
+                         bk: int = DEFAULT_BK, scale: float | None = None,
+                         softcap: float = 0.0,
+                         interpret: bool = False) -> jax.Array:
+    """q/k/v (BH, S, D) -> (BH, S, D), causal, window-banded.
+
+    S % bq == S % bk == window % bk == 0 (ops.py pads); window >= bk.
+    """
+    bh, s, d = q.shape
+    assert bq == bk, "band indexing assumes bq == bk"
+    assert s % bq == 0, "ops.py pads S to a bq multiple"
+    scale = scale if scale is not None else d ** -0.5
+    nq = s // bq
+    nw = -(-window // bk)   # ceil: band blocks needed left of the diagonal
+    nk = nw + 1             # + the diagonal block
+
+    def kv_index(b, i, j):
+        return (b, jnp.maximum(i - nw + j, 0), 0)
+
+    return pl.pallas_call(
+        functools.partial(_swa_kernel, bq=bq, bk=bk, nw=nw, nk=nk,
+                          window=window, scale=scale, softcap=softcap),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""Public SWA attention op: (B, S, H, D) layout + GQA + padding plumbing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa import kernel as K
+
+
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int, scale: float | None = None,
+                  softcap: float = 0.0, block: int = K.DEFAULT_BQ,
+                  interpret: bool = False) -> jax.Array:
+    """Causal banded attention. q (B, S, Hq, D); k/v (B, S, Hkv, D).
+
+    GQA expands kv head-wise; window >= S degrades to full flash attention.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if hq != hkv:
+        group = hq // hkv
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+
+    if s < block:  # small-shape fallback (tests); TPU shapes keep 256
+        block = max(16, 1 << (s.bit_length() - 1))
+    pad = (-s) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * hq, sp, d)
+
+    out = K.swa_attention_kernel(
+        to_bh(q), to_bh(k), to_bh(v), window=window, bq=block, bk=block,
+        scale=scale, softcap=softcap, interpret=interpret)
+    out = out.reshape(b, hq, sp, d).transpose(0, 2, 1, 3)
+    return out[:, :s]

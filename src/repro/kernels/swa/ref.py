@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: causal, window-banded softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window: int, scale: float | None = None,
+                      softcap: float = 0.0) -> jax.Array:
+    """q/k/v (BH, S, D) -> (BH, S, D); fp32 softmax."""
+    bh, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum("bld,btd->blt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)
+    mask = (pos[:, None] >= pos[None, :]) & (pos[:, None] - pos[None, :] < window)
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("blt,btd->bld", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Production mesh construction.
+
+Meshes are built by FUNCTIONS (never module-level constants) so importing
+this module does not touch jax device state — required because the dry-run
+must set ``XLA_FLAGS`` before the first jax device query.
+
+Production topology (TPU v5e-like):
+* single pod:  (16, 16)    -> ("data", "model")   256 chips
+* multi-pod:   (2, 16, 16) -> ("pod", "data", "model")  512 chips
+
+Axis semantics (see repro.sharding for the full rule table):
+* ``model`` — tensor parallel: heads / mlp / vocab shard here; intra-pod,
+  highest-bandwidth dimension.
+* ``data`` — batch data parallel + parameter FSDP (weights' d_model dims
+  shard over data+pod, ZeRO-3 style).
+* ``pod``  — a second data-parallel axis across pods; gradient reduction
+  over this axis crosses the slowest links (where the int8 compression
+  codec applies).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over the real local devices (tests / examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    mp = max(1, min(model_parallel, n))
+    dp = n // mp
+    return jax.sharding.Mesh(
+        np.asarray(devices[: dp * mp]).reshape(dp, mp), ("data", "model"))
+
+
+# Hardware constants (TPU v5e-like target; used by roofline, not runtime)
+PEAK_BF16_FLOPS = 197e12          # per chip
+PEAK_INT8_OPS = 394e12            # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+HBM_BYTES = 16 * 1024**3          # per chip
+VMEM_BYTES = 128 * 1024**2        # per core, tiling budget

@@ -1,0 +1,98 @@
+"""Abstract input/state specs for AOT lowering (no device allocation).
+
+Everything here is ``ShapeDtypeStruct``-valued: the dry-run lowers
+``train_step`` / ``serve_step`` / ``prefill`` against these stand-ins and
+compiles for the production mesh without materialising a single parameter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_caches, init_params
+from repro.sharding import active_rules, sharding_for
+from repro.types import Param, is_param, map_params, param_values
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Param tree with ShapeDtypeStruct values (via eval_shape)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def token_count(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Text-token length for a cell (VLM cells reserve patch positions)."""
+    s = shape.seq_len
+    if cfg.family == "vlm" and cfg.num_patches:
+        s -= cfg.num_patches
+    return s
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    b = shape.global_batch
+    s = token_count(cfg, shape)
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((b, cfg.encoder_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm" and cfg.num_patches:
+        batch["patches"] = _sds((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_shardings(batch: dict):
+    """NamedSharding tree for a batch dict under the active rules."""
+    axes = {
+        "tokens": ("act_batch", None),
+        "labels": ("act_batch", None),
+        "frames": ("act_batch", None, None),
+        "patches": ("act_batch", None, None),
+    }
+    return {k: sharding_for(v.shape, axes[k]) for k, v in batch.items()}
+
+
+def param_sharding_tree(abstract):
+    """Param tree (SDS values) -> NamedSharding tree (same treedef as values)."""
+    return map_params(lambda p: sharding_for(p.value.shape, p.axes), abstract)
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(TrainState of SDS, matching sharding tree)."""
+    from repro.train.step import TrainState
+
+    params_p = abstract_params(cfg)
+    values = param_values(params_p)
+    shard = param_sharding_tree(params_p)
+    fp32 = jax.tree.map(lambda v: _sds(v.shape, jnp.float32), values)
+    rep = sharding_for((), ())
+    state = TrainState(
+        params=values,
+        opt={"m": fp32, "v": fp32, "count": _sds((), jnp.int32)},
+        step=_sds((), jnp.int32), ef=None)
+    shardings = TrainState(
+        params=shard, opt={"m": shard, "v": shard, "count": rep},
+        step=rep, ef=None)
+    return state, shardings
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    """((params, caches, token, t) SDS tuple, matching shardings)."""
+    b = shape.global_batch
+    params_p = abstract_params(cfg)
+    caches_p = init_caches(cfg, b, shape.seq_len, abstract=True)
+    token = _sds((b, 1), jnp.int32)
+    t = _sds((), jnp.int32)
+    rep = sharding_for((), ())
+    args = (param_values(params_p), param_values(caches_p), token, t)
+    shardings = (
+        param_sharding_tree(params_p),
+        param_sharding_tree(caches_p),
+        sharding_for((b, 1), ("act_batch", None)),
+        rep,
+    )
+    return args, shardings

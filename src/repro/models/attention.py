@@ -1,0 +1,347 @@
+"""Attention: MHA/GQA/MQA, sliding-window (banded), cross-attn, KV caches.
+
+Implementation notes
+--------------------
+* Query-chunked "memory-efficient" attention for train/prefill: a
+  ``lax.scan`` over query chunks keeps the score matrix at
+  O(chunk x kv_span) instead of O(S^2) — required for the 32k prefill cells
+  to fit HBM at the production mesh.
+* Sliding-window attention is *banded*: each query chunk only reads the
+  (window + chunk) key slice it can see, so SWA prefill is O(S*W) compute
+  and memory, not O(S^2) with a mask.
+* GQA is computed by logically expanding KV to the query heads (a broadcast,
+  sliced per-device by the partitioner) so the head dimension shards over the
+  full `model` axis even when num_kv_heads < |model|.
+* Decode uses either a dense cache (full attention) or a rolling-buffer cache
+  of length `window` (SWA / local attention), with RoPE applied at insert
+  time (absolute positions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, apply_rope, compute_dtype
+from repro.sharding import logical_constraint
+from repro.types import Param
+
+DEFAULT_Q_CHUNK = 1024
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": Param(_dense_init(ks[0], (d, nq, hd), d), ("embed", "heads", "head_dim")),
+        "wk": Param(_dense_init(ks[1], (d, nkv, hd), d), ("embed", "kv_heads", "head_dim")),
+        "wv": Param(_dense_init(ks[2], (d, nkv, hd), d), ("embed", "kv_heads", "head_dim")),
+        "wo": Param(_dense_init(ks[3], (nq, hd, d), nq * hd), ("heads", "head_dim", "embed")),
+    }
+    if cfg.attn_bias:
+        p["bq"] = Param(jnp.zeros((nq, hd), jnp.float32), ("heads", "head_dim"))
+        p["bk"] = Param(jnp.zeros((nkv, hd), jnp.float32), ("kv_heads", "head_dim"))
+        p["bv"] = Param(jnp.zeros((nkv, hd), jnp.float32), ("kv_heads", "head_dim"))
+    return p
+
+
+def _project_q(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("...d,dnh->...nh", x, params["wq"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+    return q
+
+
+def _project_kv(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    k = jnp.einsum("...d,dnh->...nh", x, params["wk"].astype(dt))
+    v = jnp.einsum("...d,dnh->...nh", x, params["wv"].astype(dt))
+    if "bk" in params:
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return k, v
+
+
+def _expand_kv(k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, n_kv, hd) -> (B, S, n_q, hd) by broadcasting each KV group."""
+    group = cfg.num_heads // cfg.num_kv_heads
+    if group == 1:
+        return k
+    b, s, nkv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, nkv, group, hd))
+    return k.reshape(b, s, cfg.num_heads, hd)
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+# --------------------------------------------------------------------------
+# train / prefill path (query-chunked)
+# --------------------------------------------------------------------------
+def _attend_chunk(q, k, v, qpos, kpos, *, causal, window, softcap, scale):
+    """q (B,L,n,h); k/v (B,T,n,h); positions (L,), (T,) -> (B,L,n,h)."""
+    scores = jnp.einsum("blnh,btnh->bnlt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    mask &= kpos[None, :] >= 0
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bnlt,btnh->blnh", probs, v)
+
+
+def attend(params: dict, x: jax.Array, cfg: ModelConfig, *,
+           positions: jax.Array, causal: bool = True, window: int = 0,
+           kv_src: jax.Array | None = None,
+           kv_positions: jax.Array | None = None,
+           q_chunk: int = DEFAULT_Q_CHUNK,
+           return_kv: bool = False):
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    x: (B, S, d). kv_src: encoder output for cross-attention (B, T, d).
+    positions: (S,) query positions. Returns (B, S, d) [, (k, v)].
+    """
+    scale = cfg.head_dim ** -0.5
+    if cfg.attn_q_chunk:
+        q_chunk = cfg.attn_q_chunk
+    q = _project_q(params, x, cfg)
+    q = logical_constraint(q, "act_batch", "act_seq", "act_heads", None)
+    src = x if kv_src is None else kv_src
+    k, v = _project_kv(params, src, cfg)
+    if kv_positions is None:
+        kv_positions = positions if kv_src is None else jnp.arange(src.shape[1])
+    if cfg.rope_fraction > 0 and kv_src is None:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, kv_positions, cfg)
+    kv_out = (k, v)
+    k = _expand_kv(k, cfg)
+    v = _expand_kv(v, cfg)
+    k = logical_constraint(k, "act_batch", "act_seq", "act_heads", None)
+    v = logical_constraint(v, "act_batch", "act_seq", "act_heads", None)
+
+    b, s = x.shape[0], x.shape[1]
+    t = src.shape[1]
+    if s % q_chunk != 0 or s <= q_chunk:
+        q_chunk = s
+    n_chunks = s // q_chunk
+    banded = bool(window) and kv_src is None and (window + q_chunk) <= t and n_chunks > 1
+
+    # Per-chunk remat: the backward pass recomputes scores/probs instead of
+    # storing the O(chunk x kv_span) fp32 score matrices of every chunk —
+    # the flash-attention memory behaviour, expressed at the JAX level (the
+    # Pallas SWA kernel is the TPU-native realisation of the same policy).
+    chunk_fn = jax.checkpoint(
+        functools.partial(_attend_chunk, causal=causal, window=window,
+                          softcap=cfg.attn_logit_softcap, scale=scale),
+        prevent_cse=False)
+
+    if n_chunks == 1:
+        out = chunk_fn(q, k, v, positions, kv_positions)
+    else:
+        qc = q.reshape(b, n_chunks, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+        pc = positions.reshape(n_chunks, q_chunk)
+        span = window + q_chunk if banded else t
+
+        def body(_, inp):
+            qi, qpos_i, idx = inp
+            if banded:
+                start = jnp.clip(idx * q_chunk - window, 0, t - span)
+                ki = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+                vi = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+                kpos_i = start + jnp.arange(span)
+            else:
+                ki, vi, kpos_i = k, v, kv_positions
+            oi = chunk_fn(qi, ki, vi, qpos_i, kpos_i)
+            return None, oi
+
+        _, oc = jax.lax.scan(body, None, (qc, pc, jnp.arange(n_chunks)),
+                             unroll=cfg.unroll_scans)
+        out = oc.swapaxes(0, 1).reshape(b, s, cfg.num_heads, cfg.head_dim)
+
+    out = logical_constraint(out, "act_batch", "act_seq", "act_heads", None)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    if return_kv:
+        return y, kv_out
+    return y
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+def _splitk_shards(cfg: ModelConfig, cache_len: int) -> int:
+    """Split-K shard count when the cache is sequence-sharded.
+
+    When the active sharding rules map ``cache_seq`` to a mesh axis (the
+    flash-decoding layout — required when num_kv_heads doesn't divide the
+    tensor-parallel degree, e.g. grok's kv=8 on a 16-way `model` axis),
+    decode attention must be computed as per-shard partial softmax with a
+    small stat-combine, or XLA all-gathers the whole cache per token."""
+    from repro.sharding import active_rules
+
+    r = active_rules()
+    if r is None:
+        return 0
+    axes = r.rules.get("cache_seq", ())
+    ns = 1
+    for ax in axes:
+        if ax in r.mesh.axis_names:
+            ns *= r.mesh_axis_size(ax)
+    if ns > 1 and cache_len % ns == 0:
+        return ns
+    return 0
+
+
+def _attend_decode_splitk(q, k, v, t, cfg: ModelConfig, ns: int, scale):
+    """q (B,1,nq,hd); k/v (B,S,nq,hd) seq-sharded -> (B,1,nq,hd).
+
+    Reshapes S into (ns, S/ns) so the shard axis is explicit; partials are
+    local, the combine is an O(B*nq*hd) reduction over `ns` (an all-reduce
+    of KB, not an all-gather of the GB-scale cache)."""
+    b, s, nq, hd = k.shape
+    c = s // ns
+    kr = k.reshape(b, ns, c, nq, hd)
+    vr = v.reshape(b, ns, c, nq, hd)
+    kr = logical_constraint(kr, "act_batch", "cache_seq", None, None, None)
+    vr = logical_constraint(vr, "act_batch", "cache_seq", None, None, None)
+    kpos = (jnp.arange(ns)[:, None] * c + jnp.arange(c)[None, :])  # (ns, c)
+    valid = kpos <= t
+
+    scores = jnp.einsum("blnh,bscnh->bsnc", q, kr,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(valid[None, :, None, :], scores, -1e30)
+    m_i = jnp.max(scores, axis=-1)                       # (B, ns, nq)
+    p = jnp.exp(scores - m_i[..., None])
+    l_i = jnp.sum(p, axis=-1)                            # (B, ns, nq)
+    o_i = jnp.einsum("bsnc,bscnh->bsnh", p.astype(q.dtype), vr)
+
+    # combine over the sharded ns axis (tiny all-reduces under SPMD)
+    m = jnp.max(m_i, axis=1, keepdims=True)              # (B, 1, nq)
+    w = jnp.exp(m_i - m)                                 # (B, ns, nq)
+    denom = jnp.sum(w * l_i, axis=1)                     # (B, nq)
+    num = jnp.sum(w[..., None] * o_i.astype(jnp.float32), axis=1)
+    out = num / jnp.maximum(denom, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)                  # (B, 1, nq, hd)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                    window: int = 0, abstract: bool = False):
+    """Dense cache (window=0) or rolling-buffer cache of length `window`."""
+    length = min(window, max_len) if window else max_len
+    shape = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else compute_dtype(cfg)
+
+    def mk(shp, d):
+        return jax.ShapeDtypeStruct(shp, d) if abstract else jnp.zeros(shp, d)
+
+    cache = {"k": mk(shape, dt), "v": mk(shape, dt)}
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        cache["k_scale"] = mk(sshape, jnp.float32)
+        cache["v_scale"] = mk(sshape, jnp.float32)
+    return cache
+
+
+def cache_axes() -> dict:
+    kv = ("act_batch", "cache_seq", "act_kv_heads", None)
+    return {"k": kv, "v": kv, "k_scale": kv[:-1], "v_scale": kv[:-1]}
+
+
+def _quant_kv(x: jax.Array):
+    """(.., hd) -> int8 values + per-leading scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q: jax.Array, scale: jax.Array, dt) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
+
+
+def attend_decode(params: dict, x: jax.Array, cfg: ModelConfig, cache: dict,
+                  t: jax.Array, *, window: int = 0,
+                  cross_cache: dict | None = None):
+    """One-token decode. x: (B, 1, d); t: scalar current position.
+
+    Returns (y, new_cache).  With `cross_cache` set, performs cross-attention
+    against the precomputed encoder KV instead (cache is passed through).
+    """
+    scale = cfg.head_dim ** -0.5
+    q = _project_q(params, x, cfg)  # (B, 1, nq, hd)
+    if cross_cache is not None:
+        k, v = cross_cache["k"], cross_cache["v"]
+        kpos = jnp.arange(k.shape[1])
+        valid = jnp.ones((k.shape[1],), bool)
+        new_cache = cache
+    else:
+        k_new, v_new = _project_kv(params, x, cfg)
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, t[None] if t.ndim == 0 else t, cfg)
+            k_new = apply_rope(k_new, t[None] if t.ndim == 0 else t, cfg)
+        length = cache["k"].shape[1]
+        quant = cfg.kv_cache_dtype == "int8"
+        ns = _splitk_shards(cfg, length) if not window else 0
+        slot = (t % length) if window else t
+        writes = {}
+        if quant:
+            writes["k"], writes["k_scale"] = _quant_kv(k_new)
+            writes["v"], writes["v_scale"] = _quant_kv(v_new)
+        else:
+            writes["k"], writes["v"] = k_new, v_new
+        new_cache = {}
+        for name, val in writes.items():
+            buf = cache[name]
+            if ns:
+                # sequence-sharded cache: a dynamic-update-slice on the
+                # sharded dim makes SPMD gather the cache — use an
+                # elementwise select-write instead (local on every shard)
+                sel = jnp.arange(length) == slot
+                sel = sel.reshape((1, length) + (1,) * (buf.ndim - 2))
+                new_cache[name] = jnp.where(sel, val.astype(buf.dtype), buf)
+            else:
+                new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                    buf, val.astype(buf.dtype), slot, axis=1)
+        if quant:
+            k = _dequant_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+            v = _dequant_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+        else:
+            k, v = new_cache["k"], new_cache["v"]
+        idx = jnp.arange(length)
+        if window:
+            # slot i holds absolute position p_i = t - ((t - i) mod length)
+            kpos = t - jnp.mod(t - idx, length)
+            valid = (kpos >= 0) & (t - kpos < window)
+        else:
+            kpos = idx
+            valid = idx <= t
+        if ns:
+            out = _attend_decode_splitk(q, _expand_kv(k, cfg),
+                                        _expand_kv(v, cfg), t, cfg, ns, scale)
+            y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+            return y, new_cache
+
+    k = _expand_kv(k, cfg)
+    v = _expand_kv(v, cfg)
+    scores = jnp.einsum("blnh,btnh->bnlt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bnlt,btnh->blnh", probs, v)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache

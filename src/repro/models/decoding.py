@@ -1,0 +1,210 @@
+"""KV/state cache construction, prefill, and single-token decode.
+
+Cache layout mirrors the parameter layout: ``{"blocks": tuple(stacked per
+pattern position), "rem": tuple(per remainder layer)}`` so the same
+``lax.scan`` drives both.  Cache leaves are ``Param``-wrapped (logical axes)
+so the sharding resolver produces ``in_shardings`` for ``serve_step`` the
+same way it does for parameters.
+
+Cache kinds
+-----------
+* attention, full context  — dense ``(B, cache_len, n_kv, hd)`` ring written
+  at absolute slots;
+* attention, windowed (SWA / local) — rolling buffer of ``min(window,
+  cache_len)`` slots, slot = position mod length;
+* mamba-2 — ``(B, conv_k-1, C)`` conv tail + ``(B, H, N, P)`` SSM state;
+* RG-LRU — conv tail + ``(B, W)`` hidden state;
+* whisper decoder — ``{"self": dense KV, "cross": precomputed encoder KV}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import (
+    _attn_window,
+    _embed_input,
+    _run_stack,
+    _sinusoid,
+    apply_block_decode,
+    encode,
+    pattern_split,
+)
+from repro.types import Param, map_params
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+def _wrap(values, axes) -> dict:
+    """Zip a cache value dict against an axes dict into Param leaves."""
+    out = {}
+    for k, v in values.items():
+        out[k] = _wrap(v, axes[k]) if isinstance(v, dict) else Param(v, axes[k])
+    return out
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                 *, abstract: bool):
+    if kind == "ssm":
+        return _wrap(ssm_mod.init_ssm_cache(cfg, batch, abstract=abstract),
+                     ssm_mod.ssm_cache_axes())
+    if kind == "rec":
+        return _wrap(rglru_mod.init_rglru_cache(cfg, batch, abstract=abstract),
+                     rglru_mod.rglru_cache_axes())
+    window = _attn_window(cfg)
+    val = attn_mod.init_attn_cache(cfg, batch, cache_len, window=window,
+                                   abstract=abstract)
+    cache = _wrap(val, attn_mod.cache_axes())
+    if cfg.is_encoder_decoder:
+        shape = (batch, cfg.encoder_len, cfg.num_kv_heads, cfg.head_dim)
+        dt = L.compute_dtype(cfg)
+        mk = (lambda: jax.ShapeDtypeStruct(shape, dt)) if abstract else (
+            lambda: jnp.zeros(shape, dt))
+        cross = _wrap({"k": mk(), "v": mk()}, attn_mod.cache_axes())
+        cache = {"self": cache, "cross": cross}
+    return cache
+
+
+def _stack_cache(tree, n: int):
+    def one(p: Param):
+        v = p.value
+        if isinstance(v, jax.ShapeDtypeStruct):
+            sv = jax.ShapeDtypeStruct((n,) + v.shape, v.dtype)
+        else:
+            sv = jnp.broadcast_to(v[None], (n,) + v.shape)
+        return Param(sv, ("layers",) + p.axes)
+
+    return map_params(one, tree)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, *,
+                abstract: bool = False) -> dict:
+    """Param-wrapped cache pytree for `decode_step` (strip with param_values)."""
+    pattern, n_full, rem = pattern_split(cfg)
+    caches: dict = {}
+    if n_full:
+        caches["blocks"] = tuple(
+            _stack_cache(
+                _layer_cache(cfg, kind, batch, cache_len, abstract=abstract),
+                n_full)
+            for kind in pattern
+        )
+    if rem:
+        caches["rem"] = tuple(
+            _layer_cache(cfg, pattern[j % len(pattern)], batch, cache_len,
+                         abstract=abstract)
+            for j in range(rem)
+        )
+    return caches
+
+
+# --------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the caches
+# --------------------------------------------------------------------------
+def _to_decode_cache(raw, cfg: ModelConfig, kind: str, cache_len: int,
+                     positions: jax.Array):
+    """Convert raw prefill cache (per layer) to the decode cache format."""
+    if kind in ("ssm", "rec"):
+        return raw  # already {"conv": tail, "state"/"h": final}
+
+    def convert_kv(raw_kv):
+        k, v = raw_kv["k"], raw_kv["v"]
+        window = _attn_window(cfg)
+        length = min(window, cache_len) if window else cache_len
+        s = k.shape[1]
+        take = min(s, length)
+        slots = jnp.mod(positions[-take:], length)
+        buf_k = jnp.zeros((k.shape[0], length) + k.shape[2:], k.dtype)
+        buf_v = jnp.zeros_like(buf_k)
+        buf_k = buf_k.at[:, slots].set(k[:, -take:])
+        buf_v = buf_v.at[:, slots].set(v[:, -take:])
+        if cfg.kv_cache_dtype == "int8":
+            qk, sk = attn_mod._quant_kv(buf_k)
+            qv, sv = attn_mod._quant_kv(buf_v)
+            return {"k": qk, "k_scale": sk, "v": qv, "v_scale": sv}
+        return {"k": buf_k, "v": buf_v}
+
+    if cfg.is_encoder_decoder:
+        return {"self": convert_kv(raw["self"]), "cross": raw["cross"]}
+    return convert_kv(raw)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, cache_len: int):
+    """Run the full prompt, return (last-token logits (B, Vp), caches, t_next).
+
+    ``batch`` is the same structure as training (tokens + frames/patches);
+    caches come back as plain value trees in decode format.
+    """
+    pattern, _, _ = pattern_split(cfg)
+    x, positions, n_prefix = _embed_input(params, batch, cfg)
+    enc_out = encode(params, batch["frames"], cfg) if cfg.is_encoder_decoder else None
+    x, raw = _run_stack(params, x, cfg, pattern, positions=positions,
+                        causal=True, enc_out=enc_out, remat=False,
+                        collect_cache=True)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+
+    caches: dict = {}
+    if "blocks" in raw and raw["blocks"]:
+        converted = []
+        for j, kind in enumerate(pattern):
+            conv = jax.vmap(
+                lambda r: _to_decode_cache(r, cfg, kind, cache_len, positions)
+            )(raw["blocks"][j])
+            converted.append(conv)
+        caches["blocks"] = tuple(converted)
+    if "rem" in raw and raw["rem"]:
+        caches["rem"] = tuple(
+            _to_decode_cache(raw["rem"][j], cfg, pattern[j % len(pattern)],
+                             cache_len, positions)
+            for j in range(len(raw["rem"]))
+        )
+    t_next = jnp.asarray(x.shape[1], jnp.int32)
+    return logits, caches, t_next
+
+
+# --------------------------------------------------------------------------
+# single-token decode
+# --------------------------------------------------------------------------
+def decode_step(params, caches, token: jax.Array, t: jax.Array,
+                cfg: ModelConfig):
+    """One decode step.  token (B, 1) int32; t scalar absolute position.
+
+    Returns (logits (B, padded_vocab) fp32, new_caches).
+    """
+    pattern, _, _ = pattern_split(cfg)
+    x = L.embed_tokens(params["embed"], token, cfg)
+    if cfg.is_encoder_decoder:
+        x = x + _sinusoid(t[None] if t.ndim == 0 else t, cfg.d_model).astype(x.dtype)[None]
+
+    new_caches: dict = {}
+    if "blocks" in caches:
+        def body(x, inp):
+            group, group_cache = inp
+            new_group = []
+            for j, kind in enumerate(pattern):
+                x, c = apply_block_decode(group[j], x, cfg, kind,
+                                          group_cache[j], t)
+                new_group.append(c)
+            return x, tuple(new_group)
+
+        x, new_caches["blocks"] = jax.lax.scan(
+            body, x, (params["blocks"], caches["blocks"]),
+            unroll=cfg.unroll_scans)
+    if "rem" in caches:
+        rem_new = []
+        for j, blk in enumerate(params["rem"]):
+            kind = pattern[j % len(pattern)]
+            x, c = apply_block_decode(blk, x, cfg, kind, caches["rem"][j], t)
+            rem_new.append(c)
+        new_caches["rem"] = tuple(rem_new)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,168 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings.
+
+All modules are pure functions over explicit ``Param`` pytrees.  Compute
+happens in ``cfg.dtype`` (bf16 by default) with fp32 accumulations where it
+matters (norm statistics, softmax, loss).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, pad_to
+from repro.sharding import logical_constraint
+from repro.types import Param
+
+VOCAB_PAD_MULTIPLE = 128  # lcm(TPU lane width, max model-axis size)
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return pad_to(cfg.vocab_size, VOCAB_PAD_MULTIPLE)
+
+
+# --------------------------------------------------------------------------
+# initialisers
+# --------------------------------------------------------------------------
+def _dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def init_norm(cfg: ModelConfig) -> dict:
+    p = {"scale": Param(jnp.ones((cfg.d_model,), jnp.float32), ("norm",))}
+    if cfg.use_layer_norm:
+        p["bias"] = Param(jnp.zeros((cfg.d_model,), jnp.float32), ("norm",))
+    return p
+
+
+def apply_norm(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.use_layer_norm:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * params["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (fraction<1 => partial rotary, chatglm-style)
+# --------------------------------------------------------------------------
+def rope_dim(cfg: ModelConfig) -> int:
+    d = int(cfg.head_dim * cfg.rope_fraction)
+    return d - (d % 2)
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions (...,) -> cos/sin of shape (..., dim//2)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions broadcastable to (..., seq)."""
+    rd = rope_dim(cfg)
+    if rd == 0:
+        return x
+    cos, sin = rope_angles(positions, rd, cfg.rope_theta)
+    cos = cos[..., None, :]  # (..., seq, 1, rd//2)
+    sin = sin[..., None, :]
+    rot, rest = x[..., :rd], x[..., rd:]
+    x1, x2 = rot[..., : rd // 2], rot[..., rd // 2 :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), rest], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain 2-matrix)
+# --------------------------------------------------------------------------
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": Param(_dense_init(k1, (d, ff), d), ("embed", "mlp")),
+        "w_out": Param(_dense_init(k2, (ff, d), ff), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = Param(_dense_init(k3, (d, ff), d), ("embed", "mlp"))
+    if not cfg.gated_mlp and cfg.attn_bias:  # whisper-style biased MLP
+        p["b_in"] = Param(jnp.zeros((ff,), jnp.float32), ("mlp",))
+        p["b_out"] = Param(jnp.zeros((d,), jnp.float32), ("norm",))
+    return p
+
+
+def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(dt))
+    if "b_in" in params:
+        h = h + params["b_in"].astype(dt)
+    h = _act(cfg.act)(h)
+    if cfg.gated_mlp:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = h * g
+    h = logical_constraint(h, "act_batch", "act_seq", "act_mlp")
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(dt))
+    if "b_out" in params:
+        out = out + params["b_out"].astype(dt)
+    return out
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def init_embeddings(key, cfg: ModelConfig) -> dict:
+    v = padded_vocab(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": Param(_dense_init(k1, (v, cfg.d_model), cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = Param(
+            _dense_init(k2, (cfg.d_model, v), cfg.d_model), ("embed", "vocab")
+        )
+    return p
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = compute_dtype(cfg)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if cfg.family == "hybrid":  # gemma-style sqrt(d) embedding scale
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    return logical_constraint(x, "act_batch", "act_seq", "act_embed")
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Returns fp32 logits over the *padded* vocab, padding masked to -inf."""
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"].astype(dt))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["unembed"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    logits = logical_constraint(logits, "act_batch", "act_seq", "act_vocab")
+    v, vp = cfg.vocab_size, padded_vocab(cfg)
+    if vp != v:
+        mask = jnp.arange(vp) < v
+        logits = jnp.where(mask, logits, -1e9)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE in fp32. logits (..., V), labels (...)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

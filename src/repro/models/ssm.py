@@ -1,0 +1,217 @@
+"""Mamba-2 block: state-space duality (SSD), chunked matmul formulation.
+
+[arXiv:2405.21060]  The SSD layer computes, per head h with state size N:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T        (N x P state)
+    y_t = C_t^T h_t + D x_t
+
+The chunked algorithm splits L into chunks of Q tokens; within a chunk the
+contribution is a masked (C B^T ⊙ decay) matmul (MXU-friendly); across
+chunks a short ``lax.scan`` carries the (H, N, P) state.  This file is the
+pure-jnp path; ``repro.kernels.ssd`` provides the Pallas TPU kernel for the
+intra-chunk part and is numerically checked against this implementation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import logical_constraint
+from repro.types import Param
+from repro.models.layers import _dense_init
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    h, n, g = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    proj_out = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": Param(_dense_init(ks[0], (d, proj_out), d), ("embed", "ssm_inner")),
+        "conv_w": Param(
+            jax.random.normal(ks[1], (cfg.ssm_conv, _conv_channels(cfg)), jnp.float32)
+            / math.sqrt(cfg.ssm_conv), ("conv", "ssm_inner")),
+        "conv_b": Param(jnp.zeros((_conv_channels(cfg),), jnp.float32), ("ssm_inner",)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, h)), ("ssm_heads",)),
+        "dt_bias": Param(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "D": Param(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "norm_scale": Param(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+        "out_proj": Param(_dense_init(ks[2], (di, d), di), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x (B, L, C); w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(y + b)
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di, gn, h = cfg.ssm_d_inner, cfg.ssm_ngroups * cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, unroll: bool = False):
+    """SSD scan in chunked (matmul) form.
+
+    x (Bb, L, H, P); dt (Bb, L, H) [post-softplus]; A (H,) negative;
+    B, C (Bb, L, G, N); D (H,).  Returns y (Bb, L, H, P).
+    """
+    bb, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    q = chunk if l % chunk == 0 and l > chunk else l
+    nc = l // q
+
+    xc = x.reshape(bb, nc, q, h, p)
+    dtc = dt.reshape(bb, nc, q, h)
+    bc = B.reshape(bb, nc, q, g, n)
+    cc = C.reshape(bb, nc, q, g, n)
+
+    dta = dtc * A  # (Bb, nc, q, h) log-decay increments (negative)
+    cum = jnp.cumsum(dta, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (Bb,nc,l,s,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask *inside* the exp: exp of a large positive (non-causal) seg would
+    # produce inf whose where-gradient is NaN
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+
+    # intra-chunk: (C_l . B_s) * decay(l,s) * dt_s
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", cc, bc)             # (Bb,nc,g,l,s)
+    cb = cb.reshape(bb, nc, g, 1, q, q)
+    dec = decay.reshape(bb, nc, q, q, g, hg).transpose(0, 1, 4, 5, 2, 3)
+    dts = dtc.reshape(bb, nc, q, g, hg).transpose(0, 1, 3, 4, 2)  # (Bb,nc,g,hg,s)
+    scores = cb * dec * dts[:, :, :, :, None, :]
+    # scores: (Bb, nc, g, hg, l, s)
+    xh = xc.reshape(bb, nc, q, g, hg, p)
+    y_intra = jnp.einsum("bcghls,bcsghp->bclghp", scores, xh)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) dt_s B_s ⊗ x_s
+    last = cum[:, :, -1:, :]                                  # (Bb,nc,1,h)
+    w_s = jnp.exp(last - cum) * dtc                           # (Bb,nc,q,h)
+    wsh = w_s.reshape(bb, nc, q, g, hg)
+    states = jnp.einsum("bcsgn,bcsgh,bcsghp->bcghnp", bc, wsh, xh)
+
+    # inter-chunk recurrence over nc (sequential scan, nc is small)
+    chunk_decay = jnp.exp(last[:, :, 0, :]).reshape(bb, nc, g, hg)  # (Bb,nc,g,hg)
+
+    def body(carry, inp):
+        s_c, dec_c = inp                                      # (Bb,g,hg,n,p), (Bb,g,hg)
+        new = carry * dec_c[..., None, None] + s_c
+        return new, carry                                      # emit state *before* chunk
+
+    init = jnp.zeros((bb, g, hg, n, p), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        body, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+        unroll=unroll)
+    prev_states = prev_states.swapaxes(0, 1)                  # (Bb,nc,g,hg,n,p)
+
+    inner_decay = jnp.exp(cum).reshape(bb, nc, q, g, hg)
+    y_inter = jnp.einsum("bclgn,bclgh,bcghnp->bclghp", cc, inner_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(bb, l, h, p)
+    return y + x * D[None, None, :, None], final_state.reshape(bb, h, n, p)
+
+
+def apply_ssm(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              return_state: bool = False):
+    """Full-sequence Mamba-2 block. x (B, L, d) -> (B, L, d) [, cache]."""
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(dt_))
+    z, xbc_raw, dtraw = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    di, g, n = cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    xs = xbc[..., :di]
+    B = xbc[..., di : di + g * n].reshape(*xbc.shape[:2], g, n)
+    C = xbc[..., di + g * n :].reshape(*xbc.shape[:2], g, n)
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    xh = xs.reshape(*xs.shape[:2], h, p)
+    xh = logical_constraint(xh, "act_batch", "act_seq", "act_heads", None)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt, A,
+        B.astype(jnp.float32), C.astype(jnp.float32), params["D"],
+        chunk=cfg.ssm_chunk, unroll=cfg.unroll_scans)
+    y = y.reshape(*xs.shape[:2], di).astype(dt_)
+    # gated RMSNorm (mamba-2)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)
+         * params["norm_scale"]).astype(dt_)
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"].astype(dt_))
+    if return_state:
+        k = cfg.ssm_conv
+        conv_tail = xbc_raw[:, -(k - 1):, :] if xbc_raw.shape[1] >= k - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (k - 1 - xbc_raw.shape[1], 0), (0, 0)))
+        cache = {"conv": conv_tail.astype(jnp.bfloat16),
+                 "state": final_state.astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, *, abstract: bool = False):
+    h, n, p = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_shape = (batch, cfg.ssm_conv - 1, _conv_channels(cfg))
+    state_shape = (batch, h, n, p)
+    if abstract:
+        return {"conv": jax.ShapeDtypeStruct(conv_shape, jnp.bfloat16),
+                "state": jax.ShapeDtypeStruct(state_shape, jnp.float32)}
+    return {"conv": jnp.zeros(conv_shape, jnp.bfloat16),
+            "state": jnp.zeros(state_shape, jnp.float32)}
+
+
+def ssm_cache_axes() -> dict:
+    return {"conv": ("act_batch", None, "act_ssm_inner"),
+            "state": ("act_batch", "act_heads", None, None)}
+
+
+def apply_ssm_decode(params: dict, x: jax.Array, cfg: ModelConfig, cache: dict):
+    """Single-token step. x (B, 1, d) -> (y (B, 1, d), new_cache)."""
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(dt_))
+    z, xbc_new, dtraw = _split_proj(zxbcdt[:, 0, :], cfg)
+    # conv over the rolling buffer
+    conv_w = params["conv_w"].astype(dt_)
+    hist = jnp.concatenate([cache["conv"].astype(dt_), xbc_new[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, conv_w) + params["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :].astype(cache["conv"].dtype)
+
+    di, g, n = cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    h, p = cfg.ssm_nheads, cfg.ssm_head_dim
+    xs = xbc[..., :di].reshape(-1, h, p).astype(jnp.float32)
+    B = xbc[..., di : di + g * n].reshape(-1, g, n).astype(jnp.float32)
+    C = xbc[..., di + g * n :].reshape(-1, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)                                       # (B,h)
+    hg = h // g
+    Bh = jnp.repeat(B, hg, axis=1)                             # (B,h,n)
+    Ch = jnp.repeat(C, hg, axis=1)
+    new_state = (cache["state"] * da[..., None, None]
+                 + jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt, xs))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state) + xs * params["D"][None, :, None]
+    y = y.reshape(-1, di).astype(dt_) * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + cfg.norm_eps)
+         * params["norm_scale"]).astype(dt_)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"].astype(dt_))
+    return out[:, None, :], {"conv": new_conv, "state": new_state}

@@ -1,0 +1,308 @@
+"""Model assembly: heterogeneous block stacks, scan-over-layers, caches.
+
+One code path drives all ten assigned architectures:
+
+* ``block_pattern`` (e.g. ``("rec", "rec", "attn")``) is cycled over
+  ``num_layers``; layers are grouped into ``num_layers // len(pattern)``
+  *pattern groups* whose parameters are stacked and scanned with
+  ``lax.scan`` (keeps lowered HLO small for 512-device compiles), the
+  remainder layers are applied unrolled.
+* MoE families swap the dense MLP for the top-k expert layer.
+* ``encdec`` (whisper) adds an encoder stack and per-decoder-layer
+  cross-attention; the modality frontend is a stub — the batch supplies
+  precomputed frame embeddings.
+* ``vlm`` (internvl) prepends precomputed patch embeddings to the token
+  embeddings; the ViT is a stub per the assignment.
+
+Parameter trees are ``Param``-wrapped (logical axes for the sharding
+resolver); all ``apply_*`` paths take plain value trees.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.sharding import logical_constraint
+from repro.types import Param, map_params
+
+
+# --------------------------------------------------------------------------
+# structure helpers
+# --------------------------------------------------------------------------
+def pattern_split(cfg: ModelConfig) -> tuple[tuple[str, ...], int, int]:
+    """(pattern, n_full_groups, n_remainder_layers)."""
+    pat = cfg.block_pattern
+    n_full, rem = divmod(cfg.num_layers, len(pat))
+    return pat, n_full, rem
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """Absolute sinusoidal embedding (whisper-style stub positions)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(1, half - 1))
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]
+    out = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if d % 2:
+        out = jnp.pad(out, ((0, 0), (0, 1)))
+    return out
+
+
+def _attn_window(cfg: ModelConfig) -> int:
+    return cfg.sliding_window or cfg.local_window
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply
+# --------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str, *, decoder_cross: bool = False):
+    ks = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {"norm1": L.init_norm(cfg), "ssm": ssm_mod.init_ssm(ks[0], cfg)}
+    if kind == "rec":
+        return {
+            "norm1": L.init_norm(cfg),
+            "rec": rglru_mod.init_rglru(ks[0], cfg),
+            "norm2": L.init_norm(cfg),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    # attention block (dense / moe / encdec-decoder)
+    p = {
+        "norm1": L.init_norm(cfg),
+        "attn": attn_mod.init_attention(ks[0], cfg),
+        "norm2": L.init_norm(cfg),
+        "mlp": (moe_mod.init_moe(ks[1], cfg) if cfg.num_experts
+                else L.init_mlp(ks[1], cfg)),
+    }
+    if decoder_cross:
+        p["norm_x"] = L.init_norm(cfg)
+        p["xattn"] = attn_mod.init_attention(ks[2], cfg)
+    return p
+
+
+def _apply_ffn(params, x, cfg: ModelConfig):
+    if cfg.num_experts:
+        return moe_mod.apply_moe(params, x, cfg)
+    return L.apply_mlp(params, x, cfg)
+
+
+def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
+                causal: bool = True, enc_out=None, collect_cache: bool = False):
+    """Full-sequence block. Returns (x, cache_or_None)."""
+    cache = None
+    if kind == "ssm":
+        h = L.apply_norm(params["norm1"], x, cfg)
+        if collect_cache:
+            y, cache = ssm_mod.apply_ssm(params["ssm"], h, cfg, return_state=True)
+        else:
+            y = ssm_mod.apply_ssm(params["ssm"], h, cfg)
+        return x + y, cache
+    if kind == "rec":
+        h = L.apply_norm(params["norm1"], x, cfg)
+        if collect_cache:
+            y, cache = rglru_mod.apply_rglru(params["rec"], h, cfg, return_state=True)
+        else:
+            y = rglru_mod.apply_rglru(params["rec"], h, cfg)
+        x = x + y
+        x = x + _apply_ffn(params["mlp"], L.apply_norm(params["norm2"], x, cfg), cfg)
+        return x, cache
+    # attention
+    h = L.apply_norm(params["norm1"], x, cfg)
+    window = _attn_window(cfg)
+    if collect_cache:
+        y, (k, v) = attn_mod.attend(
+            params["attn"], h, cfg, positions=positions, causal=causal,
+            window=window, return_kv=True)
+        cache = {"k": k, "v": v}
+    else:
+        y = attn_mod.attend(params["attn"], h, cfg, positions=positions,
+                            causal=causal, window=window)
+    x = x + y
+    if "xattn" in params:
+        hx = L.apply_norm(params["norm_x"], x, cfg)
+        if collect_cache:
+            yx, (kx, vx) = attn_mod.attend(
+                params["xattn"], hx, cfg, positions=positions, causal=False,
+                kv_src=enc_out, return_kv=True)
+            cache = {"self": cache, "cross": {"k": kx, "v": vx}}
+        else:
+            yx = attn_mod.attend(params["xattn"], hx, cfg, positions=positions,
+                                 causal=False, kv_src=enc_out)
+        x = x + yx
+    x = x + _apply_ffn(params["mlp"], L.apply_norm(params["norm2"], x, cfg), cfg)
+    return x, cache
+
+
+def apply_block_decode(params, x, cfg: ModelConfig, kind: str, cache, t):
+    """One-token block step. Returns (x, new_cache)."""
+    if kind == "ssm":
+        h = L.apply_norm(params["norm1"], x, cfg)
+        y, new_cache = ssm_mod.apply_ssm_decode(params["ssm"], h, cfg, cache)
+        return x + y, new_cache
+    if kind == "rec":
+        h = L.apply_norm(params["norm1"], x, cfg)
+        y, new_cache = rglru_mod.apply_rglru_decode(params["rec"], h, cfg, cache)
+        x = x + y
+        x = x + _apply_ffn(params["mlp"], L.apply_norm(params["norm2"], x, cfg), cfg)
+        return x, new_cache
+    h = L.apply_norm(params["norm1"], x, cfg)
+    window = _attn_window(cfg)
+    self_cache = cache["self"] if "self" in cache else cache
+    y, new_self = attn_mod.attend_decode(params["attn"], h, cfg, self_cache, t,
+                                         window=window)
+    x = x + y
+    new_cache = new_self
+    if "xattn" in params:
+        cross = cache["cross"]
+        hx = L.apply_norm(params["norm_x"], x, cfg)
+        yx, _ = attn_mod.attend_decode(params["xattn"], hx, cfg, None, t,
+                                       cross_cache=cross)
+        x = x + yx
+        new_cache = {"self": new_self, "cross": cross}
+    x = x + _apply_ffn(params["mlp"], L.apply_norm(params["norm2"], x, cfg), cfg)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _stack_blocks(key, cfg: ModelConfig, pattern, n_full: int, *,
+                  decoder_cross: bool = False):
+    """Tuple (one entry per pattern position) of stacked block params."""
+    out = []
+    for j, kind in enumerate(pattern):
+        kj = jax.random.fold_in(key, j)
+        keys = jax.random.split(kj, n_full)
+        stacked = jax.vmap(
+            lambda k: init_block(k, cfg, kind, decoder_cross=decoder_cross)
+        )(keys)
+        stacked = map_params(lambda p: Param(p.value, ("layers",) + p.axes), stacked)
+        out.append(stacked)
+    return tuple(out)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Param-wrapped model parameters (use jax.eval_shape for abstract init)."""
+    pattern, n_full, rem = pattern_split(cfg)
+    k_emb, k_blocks, k_rem, k_enc = jax.random.split(key, 4)
+    decoder_cross = cfg.is_encoder_decoder
+    p: dict = {
+        "embed": L.init_embeddings(k_emb, cfg),
+        "final_norm": L.init_norm(cfg),
+    }
+    if n_full:
+        p["blocks"] = _stack_blocks(k_blocks, cfg, pattern, n_full,
+                                    decoder_cross=decoder_cross)
+    if rem:
+        p["rem"] = tuple(
+            init_block(jax.random.fold_in(k_rem, j), cfg, pattern[j % len(pattern)],
+                       decoder_cross=decoder_cross)
+            for j in range(rem)
+        )
+    if cfg.is_encoder_decoder:
+        ne = cfg.num_encoder_layers
+        p["encoder"] = {
+            "blocks": _stack_blocks(k_enc, cfg, ("attn",), ne),
+            "final_norm": L.init_norm(cfg),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill / encoder)
+# --------------------------------------------------------------------------
+def _run_stack(params, x, cfg: ModelConfig, pattern, *, positions, causal,
+               enc_out=None, remat: bool, collect_cache: bool = False):
+    """Scan the stacked pattern groups then the remainder layers.
+
+    Returns (x, caches) where caches mirrors {"blocks": tuple, "rem": tuple}
+    (entries None unless collect_cache).
+    """
+
+    def group_fn(x, group):
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            x, c = apply_block(group[j], x, cfg, kind, positions=positions,
+                               causal=causal, enc_out=enc_out,
+                               collect_cache=collect_cache)
+            new_caches.append(c)
+        x = logical_constraint(x, "act_batch", "act_seq", "act_embed")
+        return x, tuple(new_caches)
+
+    body = group_fn
+    if remat:
+        body = jax.checkpoint(group_fn, prevent_cse=False)
+
+    caches: dict = {}
+    if "blocks" in params:
+        x, caches["blocks"] = jax.lax.scan(body, x, params["blocks"],
+                                           unroll=cfg.unroll_scans)
+    if "rem" in params:
+        rem_caches = []
+        for j, blk in enumerate(params["rem"]):
+            kind = pattern[j % len(pattern)]
+            x, c = apply_block(blk, x, cfg, kind, positions=positions,
+                               causal=causal, enc_out=enc_out,
+                               collect_cache=collect_cache)
+            rem_caches.append(c)
+        caches["rem"] = tuple(rem_caches)
+    return x, caches
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (B, T, d)."""
+    dt = L.compute_dtype(cfg)
+    x = frames.astype(dt)
+    pos = jnp.arange(frames.shape[1])
+    x = x + _sinusoid(pos, cfg.d_model).astype(dt)[None]
+    x = logical_constraint(x, "act_batch", "act_seq", "act_embed")
+    x, _ = _run_stack(params["encoder"], x, cfg, ("attn",), positions=pos,
+                      causal=False, remat=False)
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg)
+
+
+def _embed_input(params, batch: dict, cfg: ModelConfig):
+    """Token (+patch/frame) embedding. Returns (x, positions, n_prefix)."""
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+    n_prefix = 0
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        n_prefix = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    if cfg.is_encoder_decoder:  # no RoPE — absolute sinusoid (stub positions)
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)[None]
+    return x, positions, n_prefix
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, mode: str = "train"):
+    """Full-sequence logits (B, S_tokens, padded_vocab) in fp32."""
+    pattern, _, _ = pattern_split(cfg)
+    x, positions, n_prefix = _embed_input(params, batch, cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+    remat = (mode == "train") and cfg.remat == "layer"
+    x, _ = _run_stack(params, x, cfg, pattern, positions=positions,
+                      causal=True, enc_out=enc_out, remat=remat)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    logits = forward(params, batch, cfg, mode="train")
+    loss = L.cross_entropy(logits, batch["labels"])
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+A deliberately small but production-shaped engine:
+
+* requests are padded to a common prompt length and batched;
+* one jitted ``prefill`` fills the caches, then a jitted ``decode_step``
+  runs autoregressively (the step function is compiled once and reused —
+  cache shapes are static);
+* EOS handling masks finished rows (their tokens freeze), so a batch with
+  heterogeneous completion lengths costs one kernel per step regardless.
+
+The multi-pod serving path is exercised by ``launch/dryrun.py`` which
+lowers exactly this ``decode_step`` for the decode/long-context cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.models.layers import padded_vocab
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_new) generated ids
+    lengths: np.ndarray         # (B,) #tokens before EOS (or max_new)
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, cache_len: int,
+                 eos_id: int = 2, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            functools.partial(prefill, cfg=cfg, cache_len=cache_len))
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        v = self.cfg.vocab_size
+        logits = logits[:, :v] if logits.shape[-1] != v else logits
+        if self.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, batch: dict, max_new: int, *, seed: int = 0
+                 ) -> GenerationResult:
+        """batch: {"tokens": (B, S) int32, + frames/patches stubs}."""
+        b = batch["tokens"].shape[0]
+        logits, caches, t = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        done = jnp.zeros((b,), bool)
+        out = []
+        tok = self._sample(logits, key)
+        for i in range(max_new):
+            tok = jnp.where(done, self.eos_id, tok)
+            out.append(tok)
+            done = done | (tok == self.eos_id)
+            if bool(jnp.all(done)):
+                break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, caches, tok[:, None], t)
+            t = t + 1
+            tok = self._sample(logits, sub)
+        toks = np.stack([np.asarray(o) for o in out], axis=1)
+        lengths = np.argmax(toks == self.eos_id, axis=1)
+        lengths = np.where((toks == self.eos_id).any(axis=1), lengths, toks.shape[1])
+        return GenerationResult(tokens=toks, lengths=lengths, steps=len(out))

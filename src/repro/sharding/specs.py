@@ -1,0 +1,167 @@
+"""Logical-axis -> mesh-axis resolution with divisibility fallback.
+
+Model code annotates parameters (``repro.types.Param``) and activations
+(:func:`logical_constraint`) with *logical* axis names.  A launcher activates
+an :class:`AxisRules` (mesh + mapping) and every annotation resolves to a
+``PartitionSpec``:
+
+* each logical axis maps to an ordered tuple of candidate mesh axes;
+* a candidate is used only if (a) it exists in the mesh, (b) it has not been
+  consumed by an earlier dimension of the same array, and (c) the dimension
+  size is divisible by the product of chosen axis sizes — otherwise it is
+  dropped (this is how e.g. qwen2's 14 heads gracefully decline 16-way TP
+  while its MLP still tensor-parallelizes);
+* dropped axes are recorded so the dry-run can report them.
+
+This mirrors t5x/MaxText logical axis rules but adds the divisibility
+fallback needed to drive ten heterogeneous architectures through one fixed
+production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.types import Param, is_param
+
+# Parameter logical axes -------------------------------------------------
+# "embed" is the FSDP axis: weight d_model dims shard over the data(+pod)
+# axes, ZeRO-3 style; XLA inserts the per-layer all-gather at use.
+DEFAULT_PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "embed": ("data", "pod"),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "experts": (),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "ssm_heads": ("model",),
+    "rglru": ("model",),
+    "rglru_in": ("data", "pod"),
+    "conv": (),
+    "norm": (),
+}
+
+# Activation logical axes -------------------------------------------------
+DEFAULT_ACT_RULES: dict[str, tuple[str, ...]] = {
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": (),
+    "cache_seq": (),
+    "act_ssm_inner": ("model",),
+    "act_rglru": ("model",),
+}
+
+
+@dataclasses.dataclass
+class AxisRules:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]]
+    #: logical axes that failed divisibility at least once (reporting only)
+    dropped: set = dataclasses.field(default_factory=set)
+
+    def mesh_axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+
+_state = threading.local()
+
+
+def active_rules() -> AxisRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activate_rules(mesh: Mesh, overrides: Mapping[str, tuple[str, ...]] | None = None):
+    rules = dict(DEFAULT_PARAM_RULES)
+    rules.update(DEFAULT_ACT_RULES)
+    if overrides:
+        rules.update(overrides)
+    prev = getattr(_state, "rules", None)
+    _state.rules = AxisRules(mesh=mesh, rules=rules)
+    try:
+        with mesh:
+            yield _state.rules
+    finally:
+        _state.rules = prev
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[str | None],
+             rules: AxisRules | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec under the active rules."""
+    r = rules or active_rules()
+    if r is None:
+        raise RuntimeError("no active AxisRules; wrap in activate_rules(mesh)")
+    used: set[str] = set()
+    out: list = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in r.rules:
+            out.append(None)
+            continue
+        chosen: list[str] = []
+        factor = 1
+        for mesh_ax in r.rules[ax]:
+            if mesh_ax not in r.mesh.axis_names or mesh_ax in used:
+                continue
+            size = r.mesh_axis_size(mesh_ax)
+            if dim % (factor * size) != 0:
+                r.dropped.add((ax, mesh_ax, dim))
+                continue
+            chosen.append(mesh_ax)
+            factor *= size
+        used.update(chosen)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(shape, axes, rules: AxisRules | None = None) -> NamedSharding:
+    r = rules or active_rules()
+    return NamedSharding(r.mesh, spec_for(shape, axes, r))
+
+
+def logical_constraint(x: jax.Array, *axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op when no rules active."""
+    r = active_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding_for(x.shape, axes, r))
+
+
+def param_shardings(param_tree, rules: AxisRules | None = None):
+    """Param tree -> matching NamedSharding tree (for jit in_shardings)."""
+    r = rules or active_rules()
+
+    def _one(p: Param):
+        return sharding_for(p.value.shape, p.axes, r)
+
+    return jax.tree.map(_one, param_tree, is_leaf=is_param)
+
+
+def abstract_param_shardings(values_tree, axes_tree, rules: AxisRules | None = None):
+    """Same as param_shardings but from split (values, AxesSpec) trees.
+
+    ``values_tree`` may contain ShapeDtypeStruct leaves (dry-run path).
+    """
+    r = rules or active_rules()
+    return jax.tree.map(
+        lambda v, a: sharding_for(v.shape, a.axes, r), values_tree, axes_tree
+    )

@@ -1,0 +1,2 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401

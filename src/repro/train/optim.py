@@ -1,0 +1,85 @@
+"""AdamW + warmup/cosine schedule + global-norm clipping, dependency-free.
+
+Moments are fp32 regardless of parameter dtype (mixed-precision convention:
+bf16/fp32 params, fp32 optimizer state).  All update math is fp32 with a
+final cast back to the parameter dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * t))
+    frac = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state: dict, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = opt_state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(gf)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard: skip norms/biases)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([n[0] for n in new])
+    new_m = treedef.unflatten([n[1] for n in new])
+    new_v = treedef.unflatten([n[2] for n in new])
+    return new_params, {"m": new_m, "v": new_v, "count": count}, {
+        "grad_norm": gnorm, "lr": lr}

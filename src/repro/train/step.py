@@ -1,0 +1,93 @@
+"""Microbatched train step with optional int8 gradient compression.
+
+``make_train_step`` builds the jittable step function:
+
+* microbatching — the global batch is split into ``microbatches`` chunks
+  and gradients are accumulated with a ``lax.scan`` (bounds activation
+  memory; the accumulator is fp32);
+* the model forward remats at layer-group boundaries (``cfg.remat``);
+* optional gradient compression (``repro.train.compress``) applies an
+  int8 + error-feedback codec across the ``pod`` mesh axis before the
+  optimizer — the cross-pod wire format becomes int8 (4x fewer collective
+  bytes on the slowest links), with the quantization error carried to the
+  next step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.train import compress as compress_mod
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jax.Array
+    ef: Any | None = None  # error-feedback buffers (grad compression)
+
+
+def init_train_state(params, *, compress: bool = False) -> TrainState:
+    ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if compress else None
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, compress_axis: str | None = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(acc, one):
+                g, m = grads_of(state.params, one)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return acc, m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, ms = jax.lax.scan(body, zero, mb,
+                                     unroll=cfg.unroll_scans)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+
+        ef = state.ef
+        if compress_axis is not None:
+            grads, ef = compress_mod.compressed_reduce(
+                grads, state.ef, axis=compress_axis)
+
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(params=params, opt=opt, step=state.step + 1, ef=ef), metrics
+
+    return train_step

@@ -1,0 +1,102 @@
+"""Core parameter / pytree plumbing shared by every subsystem.
+
+Parameters carry *logical axis names* alongside their values so the sharding
+resolver (``repro.sharding``) can map them onto whatever mesh is in scope
+without the model code knowing mesh geometry.  This is the same split used by
+production JAX frameworks (MaxText / t5x "logical axes"), kept dependency-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A parameter value annotated with logical axis names.
+
+    ``axes`` has one entry per array dimension; ``None`` means "never shard
+    this dimension".  Registered as a pytree node so Param trees pass through
+    ``vmap`` (layer stacking), ``eval_shape`` (abstract init for the dry-run)
+    and ``jit`` unchanged.  Rank/axes agreement is *not* enforced in the
+    constructor — ``vmap`` legitimately rebuilds Params with an extra batch
+    dimension — use :func:`validate_params` in tests instead.
+    """
+
+    value: Any
+    axes: tuple[str | None, ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def validate_params(tree) -> None:
+    """Assert every Param's axes tuple matches its value rank."""
+    def _check(p: Param):
+        if hasattr(p.value, "ndim") and len(p.axes) != p.value.ndim:
+            raise ValueError(
+                f"axes {p.axes} rank mismatch for value of shape {p.value.shape}"
+            )
+        return p
+
+    jax.tree.map(_check, tree, is_leaf=is_param)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxesSpec:
+    """Opaque (non-pytree) box for a logical-axes tuple, so an axes tree can
+    be zipped against a value tree with ``jax.tree.map``."""
+
+    axes: tuple[str | None, ...]
+
+
+def param_values(tree):
+    """Strip Param wrappers -> plain value pytree."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def param_axes(tree):
+    """Strip Param wrappers -> AxesSpec pytree (same treedef as values)."""
+    return jax.tree.map(lambda p: AxesSpec(p.axes), tree, is_leaf=is_param)
+
+
+def map_params(fn: Callable[[Param], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_param)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "size")
+    )
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def cast_floating(tree, dtype):
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,79 @@
+"""Optimized decode paths: split-K attention math + int8 KV cache parity."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.data.synthetic import make_batch
+from repro.models.attention import _attend_decode_splitk, _softcap
+from repro.types import param_values
+
+BATCH, SEQ = 2, 32
+
+
+def test_splitk_math_matches_dense():
+    """Per-shard partial softmax + combine == dense softmax attention."""
+    cfg = get_smoke_config("grok-1-314b")
+    key = jax.random.PRNGKey(0)
+    b, s, nq, hd = 2, 64, 4, 16
+    q = jax.random.normal(key, (b, 1, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, nq, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, nq, hd))
+    t = jnp.int32(40)  # positions > t must be masked
+    scale = hd ** -0.5
+
+    for ns in (2, 4, 8):
+        out = _attend_decode_splitk(q, k, v, t, cfg, ns, scale)
+        # dense reference
+        scores = jnp.einsum("blnh,btnh->bnlt", q, k) * scale
+        scores = _softcap(scores, cfg.attn_logit_softcap)
+        valid = jnp.arange(s) <= t
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ref = jnp.einsum("bnlt,btnh->blnh", probs, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "grok-1-314b"])
+def test_int8_kv_cache_decode_parity(arch):
+    """decode with an int8 KV cache tracks the bf16 full forward closely."""
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              kv_cache_dtype="int8")
+    if cfg.num_experts:
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=float(cfg.num_experts))
+    params = param_values(models.init_params(jax.random.PRNGKey(0), cfg))
+    batch = make_batch(cfg, BATCH, SEQ, seed=1)
+
+    full = models.forward(params, batch, cfg, mode="prefill")
+    ref = full[:, -1, :]
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :-1]
+    pre.pop("labels", None)
+    logits_pre, caches, t = models.prefill(params, pre, cfg, SEQ + 8)
+    # int8 cache layout present
+    blk = caches["blocks"][0] if "blocks" in caches else caches["rem"][0]
+    assert blk["k"].dtype == jnp.int8 and "k_scale" in blk
+
+    dec, _ = models.decode_step(params, caches, batch["tokens"][:, -1:], t, cfg)
+    # int8 quantization of K/V adds noise; logits must still track closely
+    err = np.abs(np.asarray(dec) - np.asarray(ref, np.float32))
+    rel = err.max() / (np.abs(np.asarray(ref)).max() + 1e-6)
+    assert rel < 0.08, f"{arch}: int8-KV decode diverged (rel {rel:.3f})"
+
+
+def test_perf_presets_importable():
+    from repro.launch.presets import PERF_PRESETS, preset_for
+
+    assert preset_for("qwen2-0.5b", "train_4k") is not None
+    assert preset_for("qwen2-0.5b", "decode_32k") is None
+    for (arch, shape), p in PERF_PRESETS.items():
+        assert set(p) <= {"overrides", "rule_overrides", "microbatches"}

@@ -1,0 +1,129 @@
+"""FAME-1 token simulation: the stall-invariance property.
+
+The paper's core mechanism (sec 3.1): a FAME-1-transformed design is
+clock-gated whenever an input token is unavailable, and the *target*
+behaviour — state trajectory and output token stream — is bit-identical
+for every host stall pattern.  Hypothesis generates random stall
+schedules; the property must hold exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fame1 import Component, FAME1Pipeline, fame1_wrap, run_hosted
+
+N_TOKENS = 12
+
+
+def _accumulator_step(state, x):
+    """A stateful target component: y_t = state + x_t; state' = y_t."""
+    y = state + x
+    return y, y
+
+
+def _mac_step(state, x):
+    """NVDLA-ish MAC pipe: multiply-accumulate with saturation."""
+    acc = jnp.clip(state["acc"] + x["a"] * x["b"], -1e6, 1e6)
+    return {"acc": acc}, acc
+
+
+def _schedule(stalls: list[bool], tokens):
+    """Interleave tokens with stall cycles -> (host_tokens, valid_mask)."""
+    t = len(tokens)
+    valid = jnp.asarray([not s for s in stalls], bool)
+    assert int(valid.sum()) == t
+    idx = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    host_tokens = tokens[jnp.clip(idx, 0, t - 1)]
+    return host_tokens, valid
+
+
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=N_TOKENS,
+                max_size=N_TOKENS))
+@settings(max_examples=25, deadline=None)
+def test_stall_invariance_accumulator(stall_runs):
+    # stall_runs[i] = number of stalled host cycles before token i
+    stalls: list[bool] = []
+    for r in stall_runs:
+        stalls.extend([True] * r)
+        stalls.append(False)
+    tokens = jnp.arange(1.0, N_TOKENS + 1.0)
+    # reference: no stalls at all
+    ref_state, ref_out, n = run_hosted(
+        _accumulator_step, jnp.float32(0.0), tokens,
+        jnp.ones((N_TOKENS,), bool))
+    host_tokens, valid = _schedule(stalls, tokens)
+    state, out, n2 = run_hosted(_accumulator_step, jnp.float32(0.0),
+                                host_tokens, valid)
+    assert int(n) == int(n2) == N_TOKENS
+    np.testing.assert_array_equal(np.asarray(ref_state), np.asarray(state))
+    np.testing.assert_array_equal(np.asarray(ref_out[:N_TOKENS]),
+                                  np.asarray(out[:N_TOKENS]))
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_stall_invariance_mac_random_schedules(seed):
+    key = jax.random.PRNGKey(seed)
+    ka, kb, ks = jax.random.split(key, 3)
+    tokens = {"a": jax.random.normal(ka, (N_TOKENS,)),
+              "b": jax.random.normal(kb, (N_TOKENS,))}
+    # random stall pattern with exactly N_TOKENS valid cycles
+    h = 3 * N_TOKENS
+    perm = jax.random.permutation(ks, h)
+    valid = jnp.zeros((h,), bool).at[perm[:N_TOKENS]].set(True)
+    idx = jnp.clip(jnp.cumsum(valid.astype(jnp.int32)) - 1, 0, N_TOKENS - 1)
+    host_tokens = jax.tree.map(lambda t: t[idx], tokens)
+
+    ref_state, ref_out, _ = run_hosted(
+        _mac_step, {"acc": jnp.float32(0.0)}, tokens,
+        jnp.ones((N_TOKENS,), bool))
+    state, out, _ = run_hosted(_mac_step, {"acc": jnp.float32(0.0)},
+                               host_tokens, valid)
+    np.testing.assert_allclose(np.asarray(ref_state["acc"]),
+                               np.asarray(state["acc"]), rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(ref_out[:N_TOKENS]),
+                               np.asarray(out[:N_TOKENS]), rtol=0, atol=0)
+
+
+def _make_pipeline():
+    """accelerator -> memory-latency stage, as in the paper's Figure 2."""
+    accel = Component(
+        name="nvdla",
+        step_fn=lambda s, x: (s + 1, x * 2.0),      # state counts tokens
+        init_state=jnp.int32(0),
+        init_output=jnp.float32(0.0))
+    memory = Component(
+        name="memmodel",
+        step_fn=lambda s, x: (s + x, x + s),        # running-sum "latency"
+        init_state=jnp.float32(0.0),
+        init_output=jnp.float32(0.0))
+    return FAME1Pipeline([accel, memory])
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_stall_invariance(seed):
+    """Back-pressured two-stage pipeline: output stream identical under
+    random per-component stalls (simulating host DRAM delays)."""
+    tokens = jnp.arange(1.0, 9.0)
+    t = tokens.shape[0]
+    pipe = _make_pipeline()
+    h = 8 * t
+    _, ref_out, ref_n = pipe.run(tokens, jnp.zeros((h, 2), bool),
+                                 max_host_cycles=h)
+    stalls = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.4, (h * 3, 2))
+    _, out, n = pipe.run(tokens, stalls, max_host_cycles=h * 3)
+    assert int(ref_n) == int(n) == t
+    np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+
+def test_fame1_wrap_gates_state():
+    hosted = fame1_wrap(_accumulator_step)
+    s0 = jnp.float32(5.0)
+    s1, (y, v) = hosted(s0, (jnp.float32(3.0), jnp.bool_(False)))
+    assert float(s1) == 5.0 and not bool(v)        # clock-gated
+    s2, (y, v) = hosted(s0, (jnp.float32(3.0), jnp.bool_(True)))
+    assert float(s2) == 8.0 and bool(v)

@@ -1,0 +1,223 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.convcore import conv2d_int8, matmul_int8
+from repro.kernels.convcore.ref import conv2d_int8_ref, matmul_int8_ref
+from repro.kernels.postproc import postprocess
+from repro.kernels.postproc.ref import postprocess_ref
+from repro.kernels.swa import swa_attention
+from repro.kernels.swa.ref import swa_attention_ref
+
+
+def _int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# convcore
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),      # single tile
+    (256, 512, 256),      # multi-k accumulation
+    (384, 640, 128),      # multiple M tiles
+    (100, 200, 60),       # ragged (exercises padding)
+    (1, 2048, 1000),      # FC-layer shape (YOLO head-ish)
+])
+@pytest.mark.parametrize("relu", [False, True])
+def test_matmul_int8_vs_ref(m, k, n, relu):
+    ka, kb, ks = jax.random.split(jax.random.PRNGKey(m * n), 3)
+    a = _int8(ka, (m, k))
+    b = _int8(kb, (k, n))
+    scale = jax.random.uniform(ks, (n,), jnp.float32, 1e-4, 1e-2)
+    bias = jax.random.normal(ks, (n,), jnp.float32)
+    out = matmul_int8(a, b, scale, bias, relu=relu, out_dtype=jnp.float32,
+                      interpret=True, bm=128, bn=128, bk=128)
+    ref = matmul_int8_ref(a, b, scale, bias, relu=relu, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_int8_exact_int_accumulation():
+    """int8 x int8 -> int32 must be exact (no float rounding in the MACs)."""
+    key = jax.random.PRNGKey(0)
+    a = _int8(key, (128, 256))
+    b = _int8(jax.random.fold_in(key, 1), (256, 128))
+    out = matmul_int8(a, b, jnp.ones((128,)), jnp.zeros((128,)),
+                      out_dtype=jnp.float32, interpret=True,
+                      bm=128, bn=128, bk=128)
+    exact = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), exact)
+
+
+@pytest.mark.parametrize("hw,cin,cout,kk,stride,pad", [
+    (8, 16, 32, 3, 1, 1),     # 3x3 same conv
+    (16, 3, 8, 3, 2, 1),      # strided downsample (darknet)
+    (8, 32, 16, 1, 1, 0),     # 1x1 bottleneck
+])
+def test_conv2d_int8_vs_ref(hw, cin, cout, kk, stride, pad):
+    key = jax.random.PRNGKey(hw * cin)
+    x = _int8(key, (2, hw, hw, cin))
+    w = _int8(jax.random.fold_in(key, 1), (kk, kk, cin, cout))
+    scale = jnp.full((cout,), 1e-3, jnp.float32)
+    bias = jnp.zeros((cout,), jnp.float32)
+    out = conv2d_int8(x, w, scale, bias, stride=stride, padding=pad,
+                      relu=True, out_dtype=jnp.float32, interpret=True)
+    ref = conv2d_int8_ref(x, w, scale, bias, stride=stride, padding=pad,
+                          relu=True, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# postproc
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("h,w,c,act,pool", [
+    (32, 32, 16, "relu", 1),
+    (32, 32, 16, "relu", 2),
+    (64, 64, 8, "sigmoid", 2),
+    (30, 30, 8, "none", 2),     # ragged H/W with pooling
+    (16, 16, 128, "tanh", 1),
+])
+def test_postproc_vs_ref(h, w, c, act, pool):
+    if (h // pool) * pool != h:
+        pytest.skip("pool must divide true size for shape parity")
+    key = jax.random.PRNGKey(h + c)
+    x = jax.random.normal(key, (2, h, w, c), jnp.float32)
+    scale = jax.random.uniform(jax.random.fold_in(key, 1), (c,), jnp.float32,
+                               0.5, 2.0)
+    bias = jax.random.normal(jax.random.fold_in(key, 2), (c,), jnp.float32)
+    out = postprocess(x, scale, bias, act=act, pool=pool,
+                      out_dtype=jnp.float32, interpret=True)
+    ref = postprocess_ref(x, scale, bias, act=act, pool=pool,
+                          out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# swa flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("s,window", [
+    (128, 32),     # banded
+    (128, 64),
+    (256, 256),    # window == S: full causal flash attention
+    (96, 32),      # ragged S (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_vs_ref(s, window, dtype):
+    key = jax.random.PRNGKey(s + window)
+    b, hq, hkv, d = 2, 4, 2, 32
+    q = jax.random.normal(key, (b, s, hq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d), dtype)
+    out = swa_attention(q, k, v, window=window, block=32, interpret=True)
+    kx = jnp.repeat(k, hq // hkv, axis=2)
+    vx = jnp.repeat(v, hq // hkv, axis=2)
+
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+
+    ref = swa_attention_ref(bh(q), bh(kx), bh(vx), window=window)
+    ref = ref.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_softcap():
+    key = jax.random.PRNGKey(9)
+    b, s, h, d = 1, 64, 2, 32
+    q = jax.random.normal(key, (b, s, h, d)) * 3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d)) * 3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    out = swa_attention(q, k, v, window=64, softcap=30.0, block=32,
+                        interpret=True)
+
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    ref = swa_attention_ref(bh(q), bh(k), bh(v), window=64, softcap=30.0)
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# ssd (mamba-2 intra-chunk)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("l,chunk,h,p,n", [
+    (64, 32, 4, 16, 32),
+    (128, 32, 8, 32, 64),
+    (32, 32, 2, 16, 16),     # single chunk
+])
+def test_ssd_intra_chunk_vs_ref(l, chunk, h, p, n):
+    from repro.kernels.ssd import ssd_intra_chunk
+    from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+
+    key = jax.random.PRNGKey(l + h)
+    bb = 2
+    x = jax.random.normal(key, (bb, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bb, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.5)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (bb, l, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (bb, l, n))
+
+    y, states, cum = ssd_intra_chunk(x, dt, A, B, C, chunk=chunk,
+                                     interpret=True)
+    nc = l // chunk if l > chunk and l % chunk == 0 else 1
+    q = l // nc
+    xr = x.reshape(bb, nc, q, h, p)
+    dtr = dt.reshape(bb, nc, q, h)
+    br = B.reshape(bb, nc, q, n)
+    cr = C.reshape(bb, nc, q, n)
+    y_ref, st_ref = ssd_intra_chunk_ref(xr, dtr, cum, br, cr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(states), np.asarray(st_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_composes_to_full_scan():
+    """Kernel intra + JAX inter-chunk scan == ssd_chunked end-to-end."""
+    from repro.kernels.ssd import ssd_intra_chunk
+    from repro.models.ssm import ssd_chunked
+
+    key = jax.random.PRNGKey(11)
+    bb, l, h, p, n, chunk = 1, 64, 4, 16, 32, 32
+    x = jax.random.normal(key, (bb, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bb, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.5)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (bb, l, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (bb, l, n))
+    D = jnp.zeros((h,))
+
+    y_intra, states, cum = ssd_intra_chunk(x, dt, A, B, C, chunk=chunk,
+                                           interpret=True)
+    nc = l // chunk
+    # inter-chunk recurrence (as in repro.models.ssm, g=1)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (bb,nc,h)
+
+    def body(carry, inp):
+        s_c, dec_c = inp
+        return carry * dec_c[..., None, None] + s_c, carry
+
+    init = jnp.zeros((bb, h, n, p))
+    _, prev = jax.lax.scan(body, init,
+                           (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev = prev.swapaxes(0, 1)                                # (bb,nc,h,n,p)
+    inner = jnp.exp(cum)                                      # (bb,nc,q,h)
+    cr = C.reshape(bb, nc, chunk, n)
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp", cr, inner, prev)
+    y = (y_intra + y_inter).reshape(bb, l, h, p)
+
+    ref4 = ssd_chunked(x, dt, A,
+                       B.reshape(bb, l, 1, n), C.reshape(bb, l, 1, n),
+                       D, chunk=chunk)[0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref4),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,67 @@
+"""Token-level SoC memory pipeline (paper Fig. 2) under FAME-1."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import LLCConfig, sequential_burst_trace, simulate_trace
+from repro.core.dram import DRAMConfig
+from repro.core.socsim import simulate_dbb_stream
+
+LLC = LLCConfig(size_bytes=4096, ways=4, block_bytes=64)
+T = 48
+
+
+def _trace():
+    # two interleaved sequential streams, NVDLA-style
+    a = sequential_burst_trace(T // 2, 32, 1, base=0)
+    b = sequential_burst_trace(T // 2, 32, 1, base=1 << 20)
+    return jnp.stack([a, b], axis=1).reshape(-1).astype(jnp.int64)
+
+
+def test_pipeline_hits_match_exact_cache_sim():
+    addrs = _trace()
+    res = simulate_dbb_stream(addrs, LLC)
+    blocks = (addrs // LLC.block_bytes).astype(jnp.int32)
+    hits = simulate_trace(blocks, sets=LLC.sets, ways=LLC.ways)
+    # hit <=> latency == t_llc_hit (20)
+    np.testing.assert_array_equal(np.asarray(res.latencies == 20),
+                                  np.asarray(hits))
+
+
+def test_spatial_locality_latency():
+    """Sequential 32 B bursts with 64 B blocks: alternating miss/hit."""
+    addrs = sequential_burst_trace(32, 32, 1).astype(jnp.int64)
+    res = simulate_dbb_stream(addrs, LLC)
+    lats = np.asarray(res.latencies)
+    assert (lats[1::2] == 20).all(), "second burst of each block must hit"
+    assert (lats[0::2] > 20).all(), "first burst of each block must miss"
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_fame1_stall_invariance_full_pipeline(seed):
+    """The paper's property on the paper's own topology: per-access
+    latencies and total cycles are identical under random host stalls."""
+    addrs = _trace()
+    ref = simulate_dbb_stream(addrs, LLC)
+    h = 6 * T
+    stalls = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.35, (h, 2))
+    out = simulate_dbb_stream(addrs, LLC, host_stalls=stalls)
+    np.testing.assert_array_equal(np.asarray(ref.latencies),
+                                  np.asarray(out.latencies))
+    assert int(ref.total_cycles) == int(out.total_cycles)
+
+
+def test_dram_row_locality_visible_through_pipeline():
+    dram = DRAMConfig()
+    # all misses (tiny 1-block llc), sequential rows -> mostly row hits
+    tiny = LLCConfig(size_bytes=64, ways=1, block_bytes=64)
+    seq = (jnp.arange(T, dtype=jnp.int64) * 64)
+    res = simulate_dbb_stream(seq, tiny, dram)
+    lats = np.asarray(res.latencies)
+    miss_lats = lats[lats > 20]
+    row_hit = 20 + dram.t_cas_cycles
+    assert (miss_lats == row_hit).mean() > 0.8
