@@ -1,17 +1,30 @@
-"""Fig. 6 — NVDLA slowdown under BwWrite co-runners (WSS x #cores)."""
+"""Fig. 6 — NVDLA slowdown under BwWrite co-runners (WSS x #cores).
+
+Driven by ``repro.core.sweep.sweep_interference``: the closed-form
+slowdown curves (anchored against the paper) plus, per (WSS, cores),
+simulated NVDLA LLC hit rates and DRAM row-hit rates with the co-runner
+write streams physically interleaved into the trace — all lanes one
+vmapped device program.
+"""
 from __future__ import annotations
 
-from repro.core import interference_sweep
+from repro.core.sweep import sweep_interference
 
 PAPER = {("llc", 4): 2.1, ("dram", 4): 2.5}
 
 
 def run() -> list[tuple]:
-    sw = interference_sweep()
+    sw = sweep_interference()
     rows = []
     for wss in ("l1", "llc", "dram"):
         for n, v in sorted(sw[wss].items()):
             paper = PAPER.get((wss, n))
             note = f"paper: {paper}" if paper else ""
             rows.append((f"fig6/{wss}_x{n}", round(v, 3), note))
+    for (wss, n), hr in sorted(sw["sim_row_hit_rates"].items()):
+        rows.append((f"fig6/simrowhit_{wss}_x{n}", round(hr, 3),
+                     "NVDLA DRAM row-hit rate, co-runners interleaved"))
+    for (wss, n), hr in sorted(sw["sim_hit_rates"].items()):
+        rows.append((f"fig6/simllchit_{wss}_x{n}", round(hr, 3),
+                     "NVDLA LLC hit rate, co-runners interleaved"))
     return rows

@@ -9,7 +9,7 @@ import sys
 import time
 
 from benchmarks import fig4_platforms, fig5_llc, fig6_interference
-from benchmarks import kernel_bench, roofline
+from benchmarks import kernel_bench, roofline, socsim_bench
 
 SUITES = {
     "fig4": fig4_platforms.run,
@@ -17,6 +17,7 @@ SUITES = {
     "fig6": fig6_interference.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,
+    "socsim": socsim_bench.run,
 }
 
 

@@ -1,0 +1,194 @@
+"""Sweep-engine benchmark: seed vs batched/compressed simulation.
+
+Three before/after comparisons, all on the same inputs with parity
+asserted (the fast paths are exact, not approximations):
+
+* **accesses/sec** — exact per-access LLC scan vs the compressed
+  segment engine on a real interleaved layer window;
+* **sweep-points/sec** — a 16-point LLC geometry sweep, per-config
+  scans (each geometry a fresh XLA specialization, as the seed ran it)
+  vs one vmapped padded-geometry program;
+* **FAME-1 replay** — the seed's fixed ``4*T*(n+1)`` host-cycle
+  schedule vs the chunked early-exit scheduler, warm-program timings.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traces
+from repro.core.cache import (
+    LLCConfig,
+    simulate_segments,
+    simulate_trace,
+)
+from repro.core.socsim import simulate_dbb_stream
+from repro.core.sweep import (
+    batched_hits,
+    grid_configs,
+    segment_sweep_hit_rates,
+)
+from repro.utils.env import jax_enable_x64
+
+
+def _wall(fn, iters: int = 3) -> float:
+    fn()                                     # warm: compile + caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def _bench_compressed(rows: list) -> None:
+    cfg = LLCConfig(size_bytes=256 * 1024, ways=8, block_bytes=64)
+    # stream granularity: whole weight/ifmap/ofmap streams in issue
+    # order (what the Fig. 5 hit-rate replay consumes) ...
+    streams = traces.window(traces.network_trace(max_ops=12), 400_000)
+    # ... and arbiter granularity: 256-burst round-robin interleave
+    fine = traces.window(traces.interleave(
+        traces.network_trace(max_ops=12), 256), 400_000)
+
+    for label, segs in (("stream", streams), ("interleaved", fine)):
+        n = traces.total_bursts(segs)
+        addrs = traces.expand(segs)
+        blocks = jnp.asarray((addrs // cfg.block_bytes).astype(np.int32))
+
+        def exact():
+            return jax.block_until_ready(
+                simulate_trace(blocks, sets=cfg.sets, ways=cfg.ways))
+
+        def compressed():
+            return simulate_segments(segs, cfg)
+
+        t_exact = _wall(exact, iters=1)
+        t_comp = _wall(compressed, iters=3)
+        res = compressed()
+        assert res.hits == int(np.asarray(exact()).sum()), "parity violation"
+        rows.append((f"socsim/exact_scan_{label}_acc_per_s",
+                     round(n / t_exact), ""))
+        rows.append((f"socsim/compressed_{label}_acc_per_s",
+                     round(n / t_comp),
+                     f"{n} bursts, {len(segs)} segments"))
+        rows.append((f"socsim/compressed_{label}_speedup_x",
+                     round(t_exact / t_comp, 1),
+                     "target >= 10x" if label == "stream" else
+                     "fine-grain fallback path"))
+
+
+def _bench_sweep(rows: list) -> None:
+    cfgs = grid_configs((0.5, 8, 64, 1024), (32, 64, 128, 256))  # 16 points
+    configs = list(cfgs.values())
+    pts = len(configs)
+
+    # the sweep: all 16 geometries over the full-frame DBB stream.  The
+    # seed's exact per-access scan is linear in trace length, so it is
+    # measured on a sub-window and extrapolated (a full-frame seed sweep
+    # would run for minutes); the engine replays the whole frame.
+    frame = traces.network_trace()
+    n_frame = traces.total_bursts(frame)
+    win = traces.window(frame, 400_000)
+    n_win = traces.total_bursts(win)
+    addrs = traces.expand(win)
+
+    def seed_window():
+        # the seed path: expand + one exact scan per geometry, each
+        # (sets, ways) its own XLA specialization
+        out = []
+        for c in configs:
+            blocks = jnp.asarray((addrs // c.block_bytes).astype(np.int32))
+            out.append(float(jnp.mean(simulate_trace(
+                blocks, sets=c.sets, ways=c.ways).astype(jnp.float32))))
+        return out
+
+    ref = seed_window()                      # also warms per-point compiles
+    assert np.allclose(ref, segment_sweep_hit_rates(win, configs),
+                       atol=1e-6), "sweep parity violation"
+    t_seed_win = _wall(seed_window, iters=1)
+    scale = n_frame / n_win
+    t_seed_frame = t_seed_win * scale
+
+    def engine_frame():
+        return segment_sweep_hit_rates(frame, configs)
+
+    t0 = time.perf_counter()
+    engine_frame()
+    t_engine_cold = time.perf_counter() - t0
+    t_engine = _wall(engine_frame, iters=2)
+    rows.append(("socsim/sweep_seed_pts_per_s",
+                 round(pts / t_seed_frame, 3),
+                 f"{pts}-point grid, {n_frame}-burst frame "
+                 f"(measured on {n_win}, x{scale:.1f} linear)"))
+    rows.append(("socsim/sweep_engine_pts_per_s", round(pts / t_engine, 2),
+                 "compressed segment engine, full frame, warm"))
+    rows.append(("socsim/sweep_speedup_x",
+                 round(t_seed_frame / t_engine, 1), "target >= 10x"))
+    rows.append(("socsim/sweep_speedup_cold_x",
+                 round(t_seed_frame / t_engine_cold, 1),
+                 "first sweep incl. engine compiles"))
+
+    # -- vmapped per-access path (fine-interleaved windows, fig5/fig6) --
+    win = traces.expand(traces.default_dbb_window(max_bursts=2048))
+
+    def seed_window():
+        out = []
+        for c in configs:
+            blocks = jnp.asarray((win // c.block_bytes).astype(np.int32))
+            out.append(simulate_trace(blocks, sets=c.sets, ways=c.ways))
+        return jax.block_until_ready(out)
+
+    def batched():
+        return jax.block_until_ready(batched_hits(win, configs))
+
+    ref_w = seed_window()
+    got_w = batched()
+    for i in range(pts):
+        assert np.array_equal(np.asarray(ref_w[i]), np.asarray(got_w[i])), i
+    t_seed_w = _wall(seed_window)
+    t_batched_w = _wall(batched)
+    rows.append(("socsim/sweep_vmapped_warm_speedup_x",
+                 round(t_seed_w / t_batched_w, 1),
+                 "per-access bits, one vmapped program"))
+
+
+def _bench_fame1(rows: list) -> None:
+    llc = LLCConfig(size_bytes=4096, ways=4, block_bytes=64)
+    addrs = traces.expand(traces.default_dbb_window(max_bursts=1024))
+
+    def seed():
+        return jax.block_until_ready(
+            simulate_dbb_stream(addrs, llc, early_exit=False).latencies)
+
+    def fast():
+        return jax.block_until_ready(
+            simulate_dbb_stream(addrs, llc, early_exit=True).latencies)
+
+    assert np.array_equal(np.asarray(seed()), np.asarray(fast()))
+    t_seed = _wall(seed)
+    t_fast = _wall(fast)
+    t = len(addrs)
+    r_seed = simulate_dbb_stream(addrs, llc, early_exit=False)
+    r_fast = simulate_dbb_stream(addrs, llc, early_exit=True)
+    rows.append(("socsim/fame1_seed_acc_per_s", round(t / t_seed),
+                 f"{r_seed.host_cycles} host cycles"))
+    rows.append(("socsim/fame1_early_exit_acc_per_s", round(t / t_fast),
+                 f"{r_fast.host_cycles} host cycles"))
+    rows.append(("socsim/fame1_speedup_x", round(t_seed / t_fast, 1),
+                 "target >= 3x"))
+
+
+def run() -> list[tuple]:
+    jax_enable_x64(False)   # defer to JAX_ENABLE_X64; addresses are checked
+    rows: list[tuple] = []
+    _bench_compressed(rows)
+    _bench_sweep(rows)
+    _bench_fame1(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,value,note")
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -6,9 +6,15 @@ Subsystems (see DESIGN.md section 2 for the TPU/JAX adaptation map):
 * ``runtime``      — command-stream compiler (accel/CPU split, tiling);
 * ``quant``        — int8 calibration for the accelerated path;
 * ``accelerator``  — NVDLA nv_large timing model behind the shared LLC;
-* ``cache``        — exact set-associative LLC simulator (runtime-config);
+* ``cache``        — exact set-associative LLC simulator (runtime-config)
+                     with a run-length-compressed segment engine;
+* ``traces``       — compressed (base, stride, count) DBB trace
+                     generation from the command stream;
+* ``sweep``        — vmapped multi-geometry LLC/interference sweeps
+                     (one compiled program per grid);
 * ``dram``         — bank/row DRAM timing model;
-* ``fame1``        — token-based target-clock decoupling combinators;
+* ``fame1``        — token-based target-clock decoupling combinators
+                     (chunked early-exit host scheduler);
 * ``interference`` — BwWrite co-runner perturbations;
 * ``soc``          — composition + the paper's three experiments.
 """

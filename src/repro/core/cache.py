@@ -1,16 +1,41 @@
 """Set-associative LLC simulator — exact, vectorized, runtime-configurable.
 
 The FireSim LLC model is runtime-configurable in sets/ways/block size
-without an FPGA rebuild; this is the same knob set, as a pure-JAX
-``lax.scan`` over an access trace (so it jit-compiles once per geometry
-and is differentiably composable with the rest of the stack if needed).
+without an FPGA rebuild; this is the same knob set, as pure JAX.  State
+is (tags, age) of shape (sets, ways); each access updates one set with
+true LRU.  Three execution paths, all bit-identical in final state and
+hit counts (tests/test_traces.py proves parity):
 
-State is (tags, age) of shape (sets, ways); each access updates one set
-with true LRU.  Used two ways:
-* exactly, on unit-test traces and on sampled windows of the NVDLA DBB
-  stream (the per-stream hit rates feed the accelerator timing model);
-* as the reference that validates the closed-form stream-locality model
-  in ``repro.core.accelerator`` (sequential-burst hit rate = 1 - 32/B).
+* **exact per-access scan** (``simulate_trace``): one ``lax.scan`` step
+  per access — the reference semantics, used on unit-test traces and as
+  the parity oracle;
+* **compressed segment engine** (``simulate_segments``): a DBB stream is
+  run-length-compressed into ``(base, stride, count)`` segments
+  (``repro.core.traces``).  A sequential segment is analytically
+  predictable under LRU, so it is retired either
+
+  - in **O(1) serial steps** (closed form): when the segment sweeps every
+    set at least ``ways`` times and none of its blocks are already
+    resident, every first touch misses, victims cycle through the ways in
+    prior-LRU order, and the final (tags, age) state and hit count are
+    written directly with no scan at all; or
+  - by the **per-set round scan**: one scan step retires one block *per
+    set* (``sets`` blocks at once, each with all its intra-block burst
+    repeats folded in), so serial depth drops from O(accesses) to
+    O(blocks / sets) — exact for warm/overlapping/partial segments where
+    the closed form does not apply.
+
+  The exact per-access scan remains the fallback at segment boundaries
+  that compression cannot express (stride > block size).
+* **batched multi-geometry scan** (``repro.core.sweep``): (tags, age)
+  padded to the largest geometry in a sweep and ``jax.vmap``-ed over
+  (sets, ways, block_bytes) so a whole Fig. 5 grid compiles once and
+  runs as a single device program.
+
+Used two ways: exactly, on sampled windows of the NVDLA DBB stream (the
+per-stream hit rates feed the accelerator timing model); and as the
+reference that validates the closed-form stream-locality model in
+``repro.core.accelerator`` (sequential-burst hit rate = 1 - 32/B).
 """
 from __future__ import annotations
 
@@ -19,6 +44,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,12 +62,17 @@ def block_address(byte_addr, block_bytes: int):
     return byte_addr // block_bytes
 
 
+def cold_state(sets: int, ways: int) -> tuple[jax.Array, jax.Array]:
+    """The (tags, age) state of an empty cache."""
+    return (jnp.full((sets, ways), -1, jnp.int32),
+            jnp.zeros((sets, ways), jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("sets", "ways"))
-def simulate_trace(block_addrs: jax.Array, *, sets: int, ways: int):
-    """block_addrs (T,) int32 -> hits (T,) bool. True-LRU, allocate-on-miss
-    (writes allocate too — NVDLA's DBB read/write bursts both fill)."""
-    set_idx = block_addrs % sets
-    tag = block_addrs // sets
+def _scan_trace(state, block_addrs, *, sets: int, ways: int):
+    """Exact per-access scan from an arbitrary (tags, age) state."""
+    set_idx = (block_addrs % sets).astype(jnp.int32)
+    tag = (block_addrs // sets).astype(jnp.int32)
 
     def step(carry, inp):
         tags, age = carry                   # (sets, ways) each
@@ -58,9 +89,15 @@ def simulate_trace(block_addrs: jax.Array, *, sets: int, ways: int):
         age = age.at[s].set(row_age)
         return (tags, age), hit
 
-    init = (jnp.full((sets, ways), -1, jnp.int32),
-            jnp.zeros((sets, ways), jnp.int32))
-    _, hits = jax.lax.scan(step, init, (set_idx, tag))
+    state, hits = jax.lax.scan(step, state, (set_idx, tag))
+    return state, hits
+
+
+def simulate_trace(block_addrs: jax.Array, *, sets: int, ways: int):
+    """block_addrs (T,) int32 -> hits (T,) bool. True-LRU, allocate-on-miss
+    (writes allocate too — NVDLA's DBB read/write bursts both fill)."""
+    _, hits = _scan_trace(cold_state(sets, ways),
+                          jnp.asarray(block_addrs), sets=sets, ways=ways)
     return hits
 
 
@@ -76,3 +113,282 @@ def sequential_burst_trace(n_bursts: int, burst_bytes: int,
     (the NVDLA weight/ifmap streaming pattern)."""
     byte_addrs = base + jnp.arange(n_bursts) * burst_bytes
     return block_address(byte_addrs, block_bytes).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# compressed segment engine
+# --------------------------------------------------------------------------
+def _block_counts(blocks, base, stride, count, block_bytes):
+    """Exact number of segment accesses landing in each block of `blocks`
+    (accesses are base + j*stride for j in [0, count))."""
+    lo = blocks * block_bytes - base
+    j_lo = jnp.maximum(0, (lo + stride - 1) // stride)
+    j_lo = jnp.where(lo <= 0, 0, j_lo)
+    j_hi = jnp.minimum(count - 1,
+                       (lo + block_bytes - 1) // stride)
+    return (j_hi - j_lo + 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sets", "ways", "m_pad"))
+def _segment_rounds_grouped(state, b_firsts, n_blockss, bases, strides,
+                            counts, block_bytes,
+                            *, sets: int, ways: int, m_pad: int):
+    """Per-set round scan over a *group* of segments (one device program
+    per group, no per-segment dispatch).  Within a segment, round k
+    retires, for every set at once, that set's k-th arriving block, with
+    all its intra-block burst repeats folded into one LRU update
+    (touched way -> age 0, other ways += accesses).  Sets are
+    independent under LRU, so this is bit-identical to the per-access
+    scan while cutting serial depth from O(count) to
+    O(segments * n_blocks / sets).  Padding segments have count == 0 and
+    update nothing."""
+    s_idx = jnp.arange(sets)
+
+    def per_segment(carry, meta):
+        b_first, n_blocks, base, stride, count = meta
+        off = (s_idx - b_first) % sets   # ordinal of a set's first block
+
+        def round_k(inner, k):
+            tags, age, hits = inner
+            i = off + k * sets           # block ordinal within segment
+            valid = i < n_blocks
+            blocks = b_first + i
+            t = (blocks // sets).astype(jnp.int32)
+            a = _block_counts(blocks, base, stride, count, block_bytes)
+            a = jnp.where(valid, a, 0)
+            match = tags == t[:, None]
+            hit = jnp.any(match, axis=1)
+            way = jnp.where(hit, jnp.argmax(match, axis=1),
+                            jnp.argmax(age, axis=1))
+            touched = jnp.arange(ways)[None, :] == way[:, None]
+            upd = valid[:, None]
+            tags = jnp.where(upd & touched, t[:, None], tags)
+            age = jnp.where(upd,
+                            jnp.where(touched, 0, age + a[:, None]), age)
+            hits = hits + jnp.sum(jnp.where(valid, a - 1 + hit, 0))
+            return (tags, age, hits), None
+
+        tags, age = carry
+        (tags, age, hits), _ = jax.lax.scan(
+            round_k, (tags, age, jnp.int32(0)), jnp.arange(m_pad))
+        return (tags, age), hits
+
+    state, hits = jax.lax.scan(
+        per_segment, state,
+        (b_firsts, n_blockss, bases, strides, counts))
+    return state, jnp.sum(hits)
+
+
+class _TouchedBlocks:
+    """Host-side conservative residency tracker: the union of block
+    intervals any earlier segment touched.  A segment disjoint from
+    every touched interval provably has no resident blocks, so its
+    disjointness can be decided without a device sync (the price of
+    conservatism: a revisit of a long-evicted range still takes the
+    round-scan path — exact either way)."""
+
+    def __init__(self):
+        self._iv: list[tuple[int, int]] = []   # merged, sorted
+
+    def overlaps(self, lo: int, hi: int) -> bool:
+        return any(a <= hi and lo <= b for a, b in self._iv)
+
+    def add(self, lo: int, hi: int) -> None:
+        merged = [(lo, hi)]
+        for a, b in self._iv:
+            if a <= merged[0][1] + 1 and merged[0][0] <= b + 1:
+                merged[0] = (min(a, merged[0][0]), max(b, merged[0][1]))
+            else:
+                merged.append((a, b))
+        self._iv = sorted(merged)
+
+
+@functools.partial(jax.jit, static_argnames=("sets", "ways"))
+def _segment_closed_form(state, b_first, n_blocks, a_interior, a_last,
+                         *, sets: int, ways: int):
+    """O(1)-serial state update for a full-sweep disjoint segment.
+
+    Preconditions (checked by the caller): every set receives >= ways
+    arrivals (n_blocks >= ways * sets), no segment block is resident
+    beforehand, and interior block access counts are uniform (stride
+    divides block size).  Then every first touch misses, so victims
+    cycle through the ways in prior-LRU order: arrival j of a set lands
+    on way rho[(j-1) % ways] where rho orders ways by descending prior
+    age (stable — matching argmax's first-index tie-break).  The final
+    occupants are each set's last `ways` arrivals and their ages are the
+    access counts of the arrivals after them.
+    """
+    tags, age = state
+    s_idx = jnp.arange(sets)
+    off = (s_idx - b_first) % sets
+    m_s = (n_blocks - off + sets - 1) // sets        # arrivals per set
+    rho = jnp.argsort(-age, axis=1, stable=True)     # (S, W) victim order
+    q = jnp.arange(ways)[None, :]
+    jstar = m_s[:, None] - ((m_s[:, None] - 1 - q) % ways)   # 1-indexed
+    i_star = off[:, None] + (jstar - 1) * sets
+    new_tag = ((b_first + i_star) // sets).astype(jnp.int32)
+    # age of the way holding arrival j* = accesses of arrivals after it;
+    # all interior blocks count a_interior, except the segment's very
+    # last block (partial) — in its set's suffix unless it *is* j*.
+    s_last = (b_first + n_blocks - 1) % sets
+    in_suffix_last = (s_idx[:, None] == s_last) & (jstar < m_s[:, None])
+    new_age = ((m_s[:, None] - jstar) * a_interior
+               + jnp.where(in_suffix_last, a_last - a_interior, 0)
+               ).astype(jnp.int32)
+    # scatter rank-ordered results back to way positions
+    tags = jnp.zeros_like(tags).at[s_idx[:, None], rho].set(new_tag)
+    age = jnp.zeros_like(age).at[s_idx[:, None], rho].set(new_age)
+    return (tags, age)
+
+
+@dataclasses.dataclass
+class SegmentSimResult:
+    hits: int
+    accesses: int
+    state: tuple                 # final (tags, age)
+    closed_form_segments: int    # retired with the O(1) analytic update
+    round_scanned_segments: int  # retired with the per-set round scan
+    expanded_segments: int       # fell back to the exact per-access scan
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.accesses)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+def simulate_segments(segments, cfg: LLCConfig, state=None
+                      ) -> SegmentSimResult:
+    """Replay a compressed DBB trace (iterable of objects/tuples with
+    ``base, stride, count`` in bytes/bursts, stride > 0) through the
+    LLC, optionally continuing from a prior (tags, age) ``state``.
+
+    Dispatches each segment to the cheapest exact path: closed form when
+    it fully sweeps a provably non-resident region, per-set round scan
+    otherwise, exact per-access scan only when compression cannot
+    express the segment (stride > block size).  Consecutive round-scan
+    segments with the same round budget are fused into one device
+    program, and hit counters stay on device until the end, so the hot
+    loop performs no per-segment synchronization.  Hit counts and final
+    state are bit-identical to expanding the segments and running
+    ``simulate_trace`` on the concatenation.
+    """
+    sets, ways, bb = cfg.sets, cfg.ways, cfg.block_bytes
+    touched = _TouchedBlocks()
+    if state is None:
+        state = cold_state(sets, ways)
+    else:
+        # arbitrary warm state: anything may be resident, so no segment
+        # is provably disjoint (long ones still split fast — the
+        # prefix/suffix proof is dynamic and needs no tracker)
+        touched.add(-(1 << 62), 1 << 62)
+    accesses = 0
+    n_cf = n_rs = n_ex = 0
+    hit_parts: list = []       # device scalars; summed once at the end
+    closed_form_hits = 0
+    # plan: classify every segment on the host, then execute, fusing
+    # consecutive round-scan segments that share an m_pad bucket
+    pending: list[tuple] = []  # (b_first, n_blocks, base, stride, count)
+    pending_m = 0
+
+    def flush():
+        nonlocal state, pending, pending_m
+        if not pending:
+            return
+        k_pad = _next_pow2(len(pending))
+        pad = k_pad - len(pending)
+        metas = pending + [(0, 0, 0, 1, 0)] * pad
+        cols = list(np.asarray(metas, np.int32).T)
+        state, h = _segment_rounds_grouped(
+            state, *cols, bb, sets=sets, ways=ways, m_pad=pending_m)
+        hit_parts.append(h)
+        pending, pending_m = [], 0
+
+    for seg in segments:
+        base, stride, count = (seg if isinstance(seg, tuple)
+                               else (seg.base, seg.stride, seg.count))
+        if count <= 0:
+            continue
+        if stride <= 0:
+            raise ValueError(
+                f"segment stride must be positive, got {stride} "
+                "(a repeated single address is not a compressible "
+                "sequential burst stream)")
+        accesses += count
+        if stride > bb:
+            # blocks are non-contiguous: expand and scan exactly
+            flush()
+            addrs = (base + jnp.arange(count) * stride) // bb
+            state, h = _scan_trace(state, addrs.astype(jnp.int32),
+                                   sets=sets, ways=ways)
+            hit_parts.append(jnp.sum(h, dtype=jnp.int32))
+            touched.add(base // bb, (base + (count - 1) * stride) // bb)
+            n_ex += 1
+            continue
+        b_first = base // bb
+        b_last = (base + (count - 1) * stride) // bb
+        n_blocks = b_last - b_first + 1
+        uniform = bb % stride == 0
+        disjoint = not touched.overlaps(b_first, b_last)
+        if uniform and not disjoint and n_blocks >= 2 * (ways + 1) * sets:
+            # long warm segment: once every set has seen >= ways arrivals
+            # the cache holds exactly those arrivals (LRU always evicts a
+            # pre-segment resident before any arrival), so everything
+            # past a (ways+1)*sets-block prefix is provably non-resident
+            # no matter what was cached before.  Round-scan the prefix,
+            # closed-form the suffix.
+            split_block = b_first + (ways + 1) * sets
+            j_split = -(-(split_block * bb - base) // stride)
+            m = _next_pow2(ways + 1)
+            if pending and m != pending_m:
+                flush()
+            pending.append((b_first, split_block - b_first, base, stride,
+                            j_split))
+            pending_m = m
+            flush()
+            n_rs += 1
+            suf_base = base + j_split * stride
+            suf_count = count - j_split
+            n_blocks_suf = b_last - split_block + 1
+            lo = b_last * bb - suf_base
+            a_last = suf_count - (0 if lo <= 0 else -(-lo // stride))
+            state = _segment_closed_form(
+                state, split_block, n_blocks_suf, bb // stride, a_last,
+                sets=sets, ways=ways)
+            closed_form_hits += suf_count - n_blocks_suf
+            n_cf += 1
+            touched.add(b_first, b_last)
+            continue
+        if n_blocks >= ways * sets and uniform and disjoint:
+            flush()
+            a_int = bb // stride
+            lo = b_last * bb - base
+            j_lo = 0 if lo <= 0 else -(-lo // stride)
+            a_last = count - j_lo
+            state = _segment_closed_form(
+                state, b_first, n_blocks, a_int, a_last,
+                sets=sets, ways=ways)
+            closed_form_hits += count - n_blocks
+            n_cf += 1
+        else:
+            m = _next_pow2(-(-n_blocks // sets))
+            if pending and m != pending_m:
+                flush()
+            pending.append((b_first, n_blocks, base, stride, count))
+            pending_m = m
+            n_rs += 1
+        touched.add(b_first, b_last)
+    flush()
+    hits = closed_form_hits + int(sum(int(h) for h in hit_parts))
+    return SegmentSimResult(hits=hits, accesses=accesses, state=state,
+                            closed_form_segments=n_cf,
+                            round_scanned_segments=n_rs,
+                            expanded_segments=n_ex)
+
+
+def hit_rate_segments(segments, cfg: LLCConfig) -> float:
+    """LLC hit rate of a compressed trace (exact, never expands unless a
+    segment's stride exceeds the block size)."""
+    return simulate_segments(segments, cfg).hit_rate

@@ -78,6 +78,15 @@ def run_yolov3(soc: SoCConfig = SoCConfig(), *, co_runners: int = 0,
 # --------------------------------------------------------------------------
 # Fig. 5 — LLC sweep
 # --------------------------------------------------------------------------
+def llc_config_for(size_kib: float, block: int) -> LLCConfig:
+    """The Fig. 5 grid's geometry rule — shared by the closed-form sweep
+    here and the simulated sweeps in ``repro.core.sweep`` so both always
+    describe the same cache."""
+    ways = min(8, max(1, int(size_kib * 1024 // block)))
+    return LLCConfig(size_bytes=int(size_kib * 1024), ways=ways,
+                     block_bytes=block)
+
+
 def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
               blocks=(32, 64, 128), soc: SoCConfig = SoCConfig()) -> dict:
     """Speedup of the NVDLA-side time vs a no-LLC design."""
@@ -87,10 +96,8 @@ def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
     out = {"no_llc_s": base, "grid": {}}
     for block in blocks:
         for size in sizes_kib:
-            ways = min(8, max(1, int(size * 1024 // block)))
-            llc = LLCConfig(size_bytes=int(size * 1024), ways=ways,
-                            block_bytes=block)
-            mem = dataclasses.replace(soc.mem, llc=llc)
+            mem = dataclasses.replace(soc.mem,
+                                      llc=llc_config_for(size, block))
             t = accel_time_s(stream, soc.accel, mem)["seconds"]
             out["grid"][(size, block)] = base / t
     return out

@@ -13,10 +13,19 @@ timing: where the closed form aggregates streams statistically, this
 pipeline replays an actual burst trace cycle by cycle.  Used for (a)
 validating the closed form on real layer traces and (b) demonstrating
 FAME-1 semantics on the paper's own topology.
+
+Performance: replay rides the chunked early-exit FAME-1 scheduler (the
+host-cycle scan stops as soon as the sink drains the trace, and all-stall
+host cycles are pre-compacted away — see ``repro.core.fame1``), and for
+hit-rate-only questions over long traces the compressed segment engine in
+``repro.core.cache``/``repro.core.traces`` avoids per-access replay
+entirely.  Address arrays go through ``repro.utils.env`` so 64-bit DBB
+addresses can never be silently truncated when x64 is disabled.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +33,12 @@ import jax.numpy as jnp
 from repro.core.cache import LLCConfig
 from repro.core.dram import DRAMConfig
 from repro.core.fame1 import Component, FAME1Pipeline
+from repro.utils.env import address_dtype, as_address_array
 
 
 def llc_component(cfg: LLCConfig) -> Component:
     sets, ways = cfg.sets, cfg.ways
+    adt = address_dtype()
 
     def step(state, addr):
         tags, age = state
@@ -44,10 +55,10 @@ def llc_component(cfg: LLCConfig) -> Component:
                                       row_age + 1))
         return (tags, age), {"addr": addr, "hit": hit}
 
-    init = (jnp.full((sets, ways), -1, jnp.int64),
+    init = (jnp.full((sets, ways), -1, adt),
             jnp.zeros((sets, ways), jnp.int32))
     return Component("llc", step, init,
-                     {"addr": jnp.int64(0), "hit": jnp.bool_(False)})
+                     {"addr": jnp.zeros((), adt), "hit": jnp.bool_(False)})
 
 
 def dram_component(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
@@ -71,7 +82,7 @@ def dram_component(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
             hit, open_rows, open_rows.at[bank].set(row_of_bank))
         return open_rows, lat
 
-    return Component("dram", step, jnp.full((banks,), -1, jnp.int64),
+    return Component("dram", step, jnp.full((banks,), -1, address_dtype()),
                      jnp.int32(0))
 
 
@@ -79,19 +90,39 @@ def dram_component(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
 class MemPipelineResult:
     latencies: jax.Array     # (T,) per-access service latency
     total_cycles: jax.Array  # sum
+    host_cycles: int | None = None   # host cycles the scheduler spent
+
+
+@functools.lru_cache(maxsize=32)
+def _mem_pipeline(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
+                  x64: bool) -> FAME1Pipeline:
+    """One pipeline (and so one jit cache) per memory configuration —
+    repeated replays reuse the compiled host program.  The x64 key
+    rebuilds the pipeline if the precision mode flips mid-process."""
+    return FAME1Pipeline([llc_component(llc_cfg),
+                          dram_component(llc_cfg, dram_cfg)])
 
 
 def simulate_dbb_stream(byte_addrs, llc_cfg: LLCConfig,
                         dram_cfg: DRAMConfig | None = None,
-                        host_stalls=None) -> MemPipelineResult:
-    """Replay a DBB burst-address trace through the LLC -> DRAM pipeline."""
+                        host_stalls=None, *,
+                        early_exit: bool = True) -> MemPipelineResult:
+    """Replay a DBB burst-address trace through the LLC -> DRAM pipeline.
+
+    ``early_exit=False`` forces the seed's fixed-length host schedule
+    (used by benchmarks as the before/after baseline); results are
+    bit-identical either way.
+    """
+    from repro.utils.env import x64_enabled
+
     dram_cfg = dram_cfg or DRAMConfig()
-    addrs = jnp.asarray(byte_addrs, jnp.int64)
-    pipe = FAME1Pipeline([llc_component(llc_cfg),
-                          dram_component(llc_cfg, dram_cfg)])
+    addrs = as_address_array(byte_addrs, what="DBB byte address")
+    pipe = _mem_pipeline(llc_cfg, dram_cfg, x64_enabled())
     _, lats, n = pipe.run(addrs, host_stalls=host_stalls,
                           max_host_cycles=(host_stalls.shape[0]
-                                           if host_stalls is not None else None))
+                                           if host_stalls is not None else None),
+                          early_exit=early_exit)
     t = addrs.shape[0]
     return MemPipelineResult(latencies=lats[:t],
-                             total_cycles=jnp.sum(lats[:t]))
+                             total_cycles=jnp.sum(lats[:t]),
+                             host_cycles=pipe.last_host_cycles)

@@ -1,0 +1,259 @@
+"""Batched memory-system sweeps: one compiled program per grid.
+
+The seed path ran every sweep point through its own ``lax.scan`` —
+and because ``simulate_trace`` specializes on (sets, ways), every
+geometry was a fresh XLA compile.  Here the (tags, age) state is padded
+to the largest geometry in the sweep and the exact LLC scan is
+``jax.vmap``-ed over per-lane (sets, ways, block_bytes) scalars, so the
+entire Fig. 5 LLC grid (and the Fig. 6 interference grid, which vmaps
+over per-lane *traces*) compiles once and runs as a single device
+program.  Padded ways are masked out of both tag match and victim
+selection, so each lane is bit-identical to the unbatched simulator
+(tests/test_sweep.py).
+
+Public API:
+* ``batched_hit_rates``   — (configs,) hit rates of one byte trace;
+* ``batched_hits``        — the raw per-access hit bits per lane;
+* ``sweep_llc``           — Fig. 5 grid: closed-form speedups + vmapped
+                            simulated hit rates on a real DBB window;
+* ``sweep_interference``  — Fig. 6 grid: closed-form slowdowns + vmapped
+                            simulated hit rates under BwWrite co-runners.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import LLCConfig
+from repro.core import traces
+from repro.utils.env import as_address_array
+
+
+@functools.partial(jax.jit, static_argnames=("max_sets", "max_ways"))
+def _simulate_padded(byte_addrs, sets, ways, block_bytes,
+                     *, max_sets: int, max_ways: int):
+    """Exact LLC scan with *runtime* geometry on padded state.
+
+    sets/ways/block_bytes are traced scalars <= the static paddings.
+    LRU is tracked as a last-touch timestamp instead of the reference
+    simulator's per-set age counters: the recency *order* (and so every
+    victim choice, including the first-index tie-break among untouched
+    ways) is identical, but the state update touches one scalar per
+    access instead of a whole way row.  Ways >= `ways` never match
+    (masked) and never win victim selection (timestamp pinned to
+    int32 max), so hits are bit-identical to the unpadded simulator for
+    the same geometry."""
+    block = byte_addrs // block_bytes
+    set_idx = (block % sets).astype(jnp.int32)
+    tag = (block // sets).astype(jnp.int32)
+    way_mask = jnp.arange(max_ways) < ways
+    imax = jnp.iinfo(jnp.int32).max
+
+    def step(carry, inp):
+        tags, ts = carry                     # (max_sets, max_ways)
+        s, t, k = inp
+        row_tags = tags[s]
+        row_ts = ts[s]
+        match = (row_tags == t) & way_mask
+        hit = jnp.any(match)
+        victim_ts = jnp.where(way_mask, row_ts, imax)
+        way = jnp.where(hit, jnp.argmax(match), jnp.argmin(victim_ts))
+        tags = tags.at[s, way].set(t)
+        ts = ts.at[s, way].set(k)
+        return (tags, ts), hit
+
+    init = (jnp.full((max_sets, max_ways), -1, jnp.int32),
+            jnp.zeros((max_sets, max_ways), jnp.int32))
+    stamps = jnp.arange(1, byte_addrs.shape[0] + 1, dtype=jnp.int32)
+    _, hits = jax.lax.scan(step, init, (set_idx, tag, stamps))
+    return hits
+
+
+def _geometry_arrays(configs):
+    sets = jnp.asarray([c.sets for c in configs], jnp.int32)
+    ways = jnp.asarray([c.ways for c in configs], jnp.int32)
+    blocks = jnp.asarray([c.block_bytes for c in configs], jnp.int32)
+    max_sets = max(c.sets for c in configs)
+    max_ways = max(c.ways for c in configs)
+    return sets, ways, blocks, max_sets, max_ways
+
+
+def batched_hits(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
+    """(n_cfg, T) per-access hit bits — every lane bit-identical to the
+    unbatched ``simulate_trace`` at that geometry, one compile total."""
+    sets, ways, blocks, max_sets, max_ways = _geometry_arrays(configs)
+    addrs = as_address_array(byte_addrs, what="DBB trace")
+    sim = jax.vmap(
+        functools.partial(_simulate_padded,
+                          max_sets=max_sets, max_ways=max_ways),
+        in_axes=(None, 0, 0, 0))
+    return sim(addrs, sets, ways, blocks)
+
+
+def batched_hit_rates(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
+    return jnp.mean(batched_hits(byte_addrs, configs).astype(jnp.float32),
+                    axis=1)
+
+
+def segment_sweep_hit_rates(segments, configs: list[LLCConfig]
+                            ) -> np.ndarray:
+    """(n_cfg,) exact hit rates of one *compressed* trace — each config
+    replayed through the segment engine (closed form / per-set rounds),
+    so whole-network windows are feasible where per-access expansion is
+    not.  Exactly ``hit_rate`` of the expanded trace, per config."""
+    from repro.core.cache import simulate_segments
+
+    return np.asarray([simulate_segments(segments, c).hit_rate
+                       for c in configs], np.float64)
+
+
+def batched_hits_per_trace(byte_addrs_2d, configs: list[LLCConfig]
+                           ) -> jax.Array:
+    """Like ``batched_hits`` but with one trace per lane (n_cfg, T) —
+    used by the interference sweep where co-runners change the trace."""
+    sets, ways, blocks, max_sets, max_ways = _geometry_arrays(configs)
+    sim = jax.vmap(
+        functools.partial(_simulate_padded,
+                          max_sets=max_sets, max_ways=max_ways),
+        in_axes=(0, 0, 0, 0))
+    return sim(as_address_array(byte_addrs_2d, what="DBB trace"),
+               sets, ways, blocks)
+
+
+# --------------------------------------------------------------------------
+# Fig. 5 — LLC geometry sweep
+# --------------------------------------------------------------------------
+def grid_configs(sizes_kib, blocks) -> dict[tuple, LLCConfig]:
+    """The Fig. 5 grid's (size, block) -> LLCConfig mapping — delegates
+    to ``repro.core.soc.llc_config_for`` so the simulated and
+    closed-form sweeps always describe the same geometry."""
+    from repro.core.soc import llc_config_for
+
+    return {(size, block): llc_config_for(size, block)
+            for block in blocks for size in sizes_kib}
+
+
+def sweep_llc(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
+              blocks=(32, 64, 128), soc=None,
+              window_bursts: int = 4096) -> dict:
+    """Fig. 5, batched: the closed-form timing grid (`grid`, `no_llc_s`)
+    plus exact simulated hit rates for every geometry (`sim_hit_rates`)
+    from a single vmapped program over a real interleaved DBB window."""
+    from repro.core.soc import SoCConfig, llc_sweep as _closed_form
+
+    soc = soc or SoCConfig()
+    out = _closed_form(sizes_kib=sizes_kib, blocks=blocks, soc=soc)
+    cfgs = grid_configs(sizes_kib, blocks)
+    win = traces.default_dbb_window(max_bursts=window_bursts)
+    addrs = traces.expand(win)
+    rates = batched_hit_rates(addrs, list(cfgs.values()))
+    out["sim_hit_rates"] = {key: float(r)
+                            for key, r in zip(cfgs, np.asarray(rates))}
+    out["window_bursts"] = traces.total_bursts(win)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def _dram_row_hits(byte_addrs, miss, *, banks: int, row_bytes: int):
+    """Row-hit bit per access, where only LLC misses (`miss`) touch the
+    open-row state — the DRAM side of the pipeline, vmappable."""
+    row = byte_addrs // row_bytes
+    bank = (row % banks).astype(jnp.int32)
+    row_of_bank = (row // banks).astype(jnp.int32)
+
+    def step(open_rows, inp):
+        b, r, m = inp
+        hit = (open_rows[b] == r) & m
+        open_rows = jnp.where(m, open_rows.at[b].set(r), open_rows)
+        return open_rows, hit
+
+    init = jnp.full((banks,), -1, jnp.int32)
+    _, hits = jax.lax.scan(step, init, (bank, row_of_bank, miss))
+    return hits
+
+
+# --------------------------------------------------------------------------
+# Fig. 6 — interference sweep
+# --------------------------------------------------------------------------
+def _corunner_trace(llc: LLCConfig, n: int, wss: str, t_total: int,
+                    nvdla_addrs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One lane's interleaved trace: 1 NVDLA burst then one write from
+    each of `n` BwWrite co-runners, repeated to `t_total` accesses.
+    Returns (byte_addrs, nvdla_mask).  Co-runner working sets: "llc"
+    wraps inside half the LLC (occupies it), "dram" streams far past it
+    (sweeps it), "l1" never reaches the shared fabric (no accesses)."""
+    if wss == "l1":
+        n = 0
+    period = 1 + n
+    slots = np.arange(t_total)
+    lane = slots % period
+    nvdla_mask = lane == 0
+    addrs = np.zeros(t_total, np.int64)
+    n_nv = int(nvdla_mask.sum())
+    addrs[nvdla_mask] = nvdla_addrs[np.arange(n_nv) % len(nvdla_addrs)]
+    for w in range(1, period):
+        m = lane == w
+        k = int(m.sum())
+        step = np.arange(k, dtype=np.int64) * 64          # 64 B lines
+        if wss == "llc":
+            span = max(64, llc.size_bytes // 2)
+            region = 0x4000_0000 + (w - 1) * 0x0100_0000
+            addrs[m] = region + (step % span)
+        else:                                             # "dram"
+            span = llc.size_bytes * 8
+            region = 0x6000_0000 + (w - 1) * 0x0800_0000
+            addrs[m] = region + (step % span)
+    return addrs, nvdla_mask
+
+
+def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
+                       window_bursts: int = 4096) -> dict:
+    """Fig. 6, batched: closed-form slowdown curves (`l1`/`llc`/`dram`)
+    plus, per (wss, n), the *simulated* NVDLA hit rate with co-runner
+    write streams physically interleaved into the trace (`sim_hit_rates`)
+    — all lanes one vmapped program."""
+    from repro.core.dram import DRAMConfig
+    from repro.core.soc import SoCConfig, interference_sweep as _closed_form
+
+    soc = soc or SoCConfig()
+    out = _closed_form(soc=soc, corunners=corunners)
+    llc = soc.mem.llc or LLCConfig()
+    dram = soc.mem.dram or DRAMConfig()
+    nvdla = traces.expand(traces.default_dbb_window(
+        max_bursts=window_bursts))
+    # l1-fitting co-runners never reach the shared fabric, so every
+    # ('l1', n) lane is the solo-NVDLA trace — simulate it once and fan
+    # the result out to all n below
+    lanes, traces_2d, masks, cfgs = [], [], [], []
+    for wss, ns in (("l1", (0,)), ("llc", corunners), ("dram", corunners)):
+        for n in ns:
+            a, m = _corunner_trace(llc, n, wss, window_bursts, nvdla)
+            lanes.append((wss, n))
+            traces_2d.append(a)
+            masks.append(m)
+            cfgs.append(llc)
+    stacked = np.stack(traces_2d)
+    hits = np.asarray(batched_hits_per_trace(stacked, cfgs))
+    # DRAM behind the LLC: misses of *all* masters mix in the banks, so
+    # co-runner misses break the NVDLA stream's row locality — the
+    # FR-FCFS disruption Fig. 6 attributes the "dram" slowdown to.
+    row_hits = np.asarray(jax.vmap(
+        functools.partial(_dram_row_hits, banks=dram.banks,
+                          row_bytes=dram.row_bytes))(
+        as_address_array(stacked, what="DBB trace"), jnp.asarray(~hits)))
+    out["sim_hit_rates"] = {}
+    out["sim_row_hit_rates"] = {}
+    for i, (wss, n) in enumerate(lanes):
+        nv = masks[i]
+        hr = float(hits[i][nv].mean())
+        nv_miss = nv & ~hits[i]
+        rh = float(row_hits[i][nv_miss].mean()) if nv_miss.any() else 1.0
+        for key in ([(wss, n)] if wss != "l1"
+                    else [("l1", m) for m in corunners]):
+            out["sim_hit_rates"][key] = hr
+            out["sim_row_hit_rates"][key] = rh
+    return out

@@ -1,0 +1,179 @@
+"""Run-length-compressed NVDLA DBB traces.
+
+A full YOLOv3 frame is ~60M DBB bursts; materializing it as a per-access
+array (let alone scanning it serially) is unusable.  But the DBB traffic
+is *structured*: every AccelOp reads its weights, streams its ifmap and
+writes its ofmap as byte-sequential 32 B bursts from a handful of base
+addresses.  This module expresses that stream exactly as ``Segment``
+records — ``(base, stride, count)`` arithmetic progressions of byte
+addresses — generated straight from the command stream that
+``repro.core.runtime`` compiles out of ``yolov3.LAYERS``:
+
+* weights live in a packed read-only region, re-streamed once per tile
+  pass (``weight_passes`` segments over the same bytes — real temporal
+  reuse the LLC can catch);
+* feature maps ping-pong between two activation regions (the producer's
+  ofmap region is the consumer's ifmap region);
+* the DBB arbiter interleaves the three streams; ``interleave`` models
+  that by splitting segments into round-robin chunks at a configurable
+  burst granularity (the compressed simulator falls back from the
+  closed form to its per-set scan exactly at these interleave points).
+
+``repro.core.cache.simulate_segments`` consumes these directly;
+``expand`` materializes the identical per-access byte trace for parity
+testing and for the vmapped window sweeps in ``repro.core.sweep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.runtime import AccelOp, CommandStream, compile_network
+
+BURST_BYTES = 32       # NVDLA DBB minimum burst (paper sec. 4.1)
+
+# DBB address map: weights packed from 0, activations ping-pong in two
+# regions well above the weight heap (YOLOv3 needs ~62 MiB of weights
+# and < 16 MiB per feature map).
+WEIGHT_REGION = 0x0000_0000
+FMAP_REGION_A = 0x1000_0000
+FMAP_REGION_B = 0x1800_0000
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """`count` bursts at `base`, `base+stride`, ... (byte addresses)."""
+    base: int
+    stride: int
+    count: int
+    stream: str = ""           # "weight" | "ifmap" | "ofmap" (labelling)
+
+    @property
+    def bytes(self) -> int:
+        return self.count * self.stride
+
+    def split(self, chunk_bursts: int) -> list["Segment"]:
+        """Cut into chunks of at most `chunk_bursts` bursts."""
+        out = []
+        done = 0
+        while done < self.count:
+            n = min(chunk_bursts, self.count - done)
+            out.append(Segment(self.base + done * self.stride,
+                               self.stride, n, self.stream))
+            done += n
+        return out
+
+
+def _bursts(n_bytes: int) -> int:
+    return -(-n_bytes // BURST_BYTES)
+
+
+def op_segments(op: AccelOp, weight_base: int, ifmap_base: int,
+                ofmap_base: int) -> list[Segment]:
+    """One AccelOp's DBB streams as segments, in issue order: each tile
+    pass re-streams the weights, then the ifmap share, then the ofmap
+    share (matching the traffic accounting in ``repro.core.runtime``)."""
+    segs: list[Segment] = []
+    passes = max(1, op.weight_passes)
+    w_per_pass = op.weight_traffic // passes
+    i_total, o_total = op.ifmap_traffic, op.ofmap_traffic
+    i_done = o_done = 0
+    for p in range(passes):
+        if w_per_pass:
+            segs.append(Segment(weight_base, BURST_BYTES,
+                                _bursts(w_per_pass), "weight"))
+        i_share = i_total * (p + 1) // passes - i_done
+        o_share = o_total * (p + 1) // passes - o_done
+        if i_share:
+            segs.append(Segment(ifmap_base + i_done, BURST_BYTES,
+                                _bursts(i_share), "ifmap"))
+        if o_share:
+            segs.append(Segment(ofmap_base + o_done, BURST_BYTES,
+                                _bursts(o_share), "ofmap"))
+        i_done += i_share
+        o_done += o_share
+    return segs
+
+
+def network_trace(stream: CommandStream | None = None,
+                  max_ops: int | None = None) -> list[Segment]:
+    """The whole accelerated network's DBB stream, compressed.
+
+    Weight regions are packed in layer order; feature maps ping-pong
+    between two regions so a consumer reads where its producer wrote.
+    """
+    stream = stream or compile_network()
+    ops = stream.accel_ops[:max_ops] if max_ops else stream.accel_ops
+    segs: list[Segment] = []
+    w_cursor = WEIGHT_REGION
+    regions = (FMAP_REGION_A, FMAP_REGION_B)
+    for i, op in enumerate(ops):
+        ifmap_base = regions[i % 2]
+        ofmap_base = regions[(i + 1) % 2]
+        segs.extend(op_segments(op, w_cursor, ifmap_base, ofmap_base))
+        passes = max(1, op.weight_passes)
+        w_cursor += op.weight_traffic // passes
+    return segs
+
+
+def interleave(segments: list[Segment], chunk_bursts: int = 64
+               ) -> list[Segment]:
+    """Round-robin the streams at `chunk_bursts` granularity — the DBB
+    arbiter's view.  Segments with distinct `stream` labels alternate;
+    order within a stream is preserved.  The result is still a valid
+    compressed trace (many short segments)."""
+    lanes: dict[str, list[Segment]] = {}
+    for seg in segments:
+        lanes.setdefault(seg.stream or "_", []).extend(
+            seg.split(chunk_bursts))
+    out: list[Segment] = []
+    queues = list(lanes.values())
+    idx = [0] * len(queues)
+    while True:
+        progressed = False
+        for q, queue in enumerate(queues):
+            if idx[q] < len(queue):
+                out.append(queue[idx[q]])
+                idx[q] += 1
+                progressed = True
+        if not progressed:
+            return out
+
+
+def window(segments: list[Segment], max_bursts: int) -> list[Segment]:
+    """Clip a compressed trace to its first `max_bursts` accesses."""
+    out: list[Segment] = []
+    left = max_bursts
+    for seg in segments:
+        if left <= 0:
+            break
+        n = min(seg.count, left)
+        out.append(dataclasses.replace(seg, count=n))
+        left -= n
+    return out
+
+
+def total_bursts(segments: list[Segment]) -> int:
+    return sum(s.count for s in segments)
+
+
+def expand(segments: list[Segment]) -> np.ndarray:
+    """Materialize the exact per-access byte-address trace (int64 numpy;
+    parity-test oracle — never needed on the fast path)."""
+    parts = [s.base + np.arange(s.count, dtype=np.int64) * s.stride
+             for s in segments]
+    if not parts:
+        return np.zeros((0,), np.int64)
+    return np.concatenate(parts)
+
+
+def default_dbb_window(max_bursts: int = 4096, chunk_bursts: int = 16,
+                       layer_index: int = 40) -> list[Segment]:
+    """A representative DBB window for sweeps: a mid-network conv layer's
+    weight/ifmap/ofmap streams, arbiter-interleaved."""
+    stream = compile_network()
+    ops = stream.accel_ops
+    op = ops[min(layer_index, len(ops) - 1)]
+    segs = op_segments(op, WEIGHT_REGION, FMAP_REGION_A, FMAP_REGION_B)
+    return window(interleave(segs, chunk_bursts), max_bursts)

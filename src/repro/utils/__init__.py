@@ -1,0 +1,1 @@
+"""Cross-cutting utilities (runtime environment, precision control)."""

@@ -11,7 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.fame1 import Component, FAME1Pipeline, fame1_wrap, run_hosted
 

@@ -4,7 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import LLCConfig, sequential_burst_trace, simulate_trace
 from repro.core.dram import DRAMConfig

@@ -1,0 +1,156 @@
+"""Batched sweep engine + early-exit FAME-1 scheduler.
+
+Parity requirements (no Hypothesis — these must run everywhere):
+* vmapped padded-geometry simulation == per-config unbatched scans,
+  bit for bit;
+* early-exit chunked FAME-1 replay == the seed's fixed schedule,
+  bit for bit, with and without stalls (including all-stall cycles
+  that pre-compaction drops);
+* sweep drivers keep the paper-anchored closed-form grids intact.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import traces
+from repro.core.cache import LLCConfig, simulate_trace
+from repro.core.fame1 import Component, FAME1Pipeline
+from repro.core.socsim import simulate_dbb_stream
+from repro.core.sweep import (
+    batched_hits,
+    batched_hit_rates,
+    grid_configs,
+    segment_sweep_hit_rates,
+    sweep_interference,
+    sweep_llc,
+)
+
+LLC = LLCConfig(size_bytes=4096, ways=4, block_bytes=64)
+
+
+def _window(n=768):
+    return traces.expand(traces.default_dbb_window(max_bursts=n))
+
+
+# --------------------------------------------------------------------------
+# vmapped sweeps
+# --------------------------------------------------------------------------
+def test_batched_hits_bitwise_parity_with_per_config_loop():
+    addrs = _window()
+    configs = list(grid_configs((0.5, 8, 64), (32, 64, 128)).values())
+    got = np.asarray(batched_hits(addrs, configs))
+    for i, c in enumerate(configs):
+        blocks = jnp.asarray((addrs // c.block_bytes).astype(np.int32))
+        ref = np.asarray(simulate_trace(blocks, sets=c.sets, ways=c.ways))
+        np.testing.assert_array_equal(got[i], ref, err_msg=str(c))
+
+
+def test_batched_hit_rates_block_size_ordering():
+    addrs = _window()
+    configs = [LLCConfig(size_bytes=64 * 1024, ways=8, block_bytes=b)
+               for b in (32, 64, 128)]
+    r32, r64, r128 = np.asarray(batched_hit_rates(addrs, configs))
+    assert r32 < r64 < r128, "spatial locality must grow with block size"
+
+
+def test_segment_sweep_matches_expanded_scans():
+    segs = traces.window(traces.network_trace(max_ops=3), 30_000)
+    addrs = traces.expand(segs)
+    configs = list(grid_configs((0.5, 64), (32, 128)).values())
+    got = segment_sweep_hit_rates(segs, configs)
+    for i, c in enumerate(configs):
+        blocks = jnp.asarray((addrs // c.block_bytes).astype(np.int32))
+        ref = float(jnp.mean(simulate_trace(
+            blocks, sets=c.sets, ways=c.ways).astype(jnp.float32)))
+        assert abs(got[i] - ref) < 1e-6, c
+
+
+def test_sweep_llc_keeps_closed_form_grid_and_adds_sim():
+    from repro.core.soc import llc_sweep
+
+    sizes, blocks = (0.5, 1024), (32, 64)
+    sw = sweep_llc(sizes_kib=sizes, blocks=blocks, window_bursts=512)
+    ref = llc_sweep(sizes_kib=sizes, blocks=blocks)
+    assert sw["no_llc_s"] == ref["no_llc_s"]
+    assert sw["grid"] == ref["grid"]
+    assert set(sw["sim_hit_rates"]) == set(ref["grid"])
+    assert all(0.0 <= v <= 1.0 for v in sw["sim_hit_rates"].values())
+
+
+def test_sweep_interference_keeps_closed_form_and_degrades_rows():
+    sw = sweep_interference(corunners=(0, 4), window_bursts=1024)
+    assert all(abs(v - 1.0) < 1e-9 for v in sw["l1"].values())
+    assert sw["dram"][4] > sw["llc"][4] > 1.0
+    # simulated DRAM row locality: untouched by L1-fitting co-runners,
+    # degraded by DRAM-fitting ones
+    rh = sw["sim_row_hit_rates"]
+    assert rh[("l1", 4)] == rh[("l1", 0)]
+    assert rh[("dram", 4)] < rh[("dram", 0)]
+
+
+# --------------------------------------------------------------------------
+# early-exit FAME-1 scheduler
+# --------------------------------------------------------------------------
+def _pipeline():
+    accel = Component("nvdla", lambda s, x: (s + 1, x * 2.0),
+                      jnp.int32(0), jnp.float32(0.0))
+    mem = Component("memmodel", lambda s, x: (s + x, x + s),
+                    jnp.float32(0.0), jnp.float32(0.0))
+    return FAME1Pipeline([accel, mem])
+
+
+def test_early_exit_equals_fixed_schedule_no_stalls():
+    tokens = jnp.arange(1.0, 33.0)
+    pipe = _pipeline()
+    s_ref, out_ref, n_ref = pipe.run(tokens, early_exit=False)
+    fixed_cycles = pipe.last_host_cycles
+    s_fast, out_fast, n_fast = pipe.run(tokens, early_exit=True)
+    assert int(n_ref) == int(n_fast) == 32
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_fast))
+    np.testing.assert_array_equal(np.asarray(s_ref[0]), np.asarray(s_fast[0]))
+    np.testing.assert_array_equal(np.asarray(s_ref[1]), np.asarray(s_fast[1]))
+    assert pipe.last_host_cycles < fixed_cycles / 3, \
+        "early exit must skip most of the 4*T*(n+1) schedule"
+
+
+def test_early_exit_equals_fixed_under_random_stalls():
+    tokens = jnp.arange(1.0, 17.0)
+    pipe = _pipeline()
+    for seed in range(6):
+        stalls = jax.random.bernoulli(
+            jax.random.PRNGKey(seed), 0.45, (16 * 8, 2))
+        _, out_ref, n_ref = pipe.run(tokens, host_stalls=stalls,
+                                     early_exit=False)
+        _, out_fast, n_fast = pipe.run(tokens, host_stalls=stalls,
+                                       early_exit=True)
+        assert int(n_ref) == int(n_fast)
+        np.testing.assert_array_equal(np.asarray(out_ref),
+                                      np.asarray(out_fast))
+
+
+def test_all_stall_cycles_are_compacted_away():
+    tokens = jnp.arange(1.0, 9.0)
+    pipe = _pipeline()
+    h = 8 * 8
+    # every other host cycle stalls *all* components
+    stalls = jnp.zeros((h, 2), bool).at[::2].set(True)
+    _, out_ref, n_ref = pipe.run(tokens, host_stalls=stalls,
+                                 early_exit=False)
+    _, out_fast, n_fast = pipe.run(tokens, host_stalls=stalls,
+                                   early_exit=True)
+    assert int(n_ref) == int(n_fast) == 8
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_fast))
+    assert pipe.last_host_cycles <= h // 2, \
+        "compaction must drop the all-stall cycles before simulating"
+
+
+def test_dbb_stream_early_exit_parity_and_host_cycles():
+    addrs = traces.expand(traces.default_dbb_window(max_bursts=96))
+    ref = simulate_dbb_stream(addrs, LLC, early_exit=False)
+    fast = simulate_dbb_stream(addrs, LLC, early_exit=True)
+    np.testing.assert_array_equal(np.asarray(ref.latencies),
+                                  np.asarray(fast.latencies))
+    assert int(ref.total_cycles) == int(fast.total_cycles)
+    assert fast.host_cycles < ref.host_cycles / 3

@@ -1,0 +1,158 @@
+"""Compressed DBB traces + segment engine: bit-exact parity with the
+per-access reference simulator on every dispatch path (closed form,
+per-set round scan, prefix/suffix split, expand fallback)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import traces
+from repro.core.cache import (
+    LLCConfig,
+    _scan_trace,
+    cold_state,
+    hit_rate,
+    hit_rate_segments,
+    simulate_segments,
+)
+from repro.core.traces import Segment
+from repro.utils.env import as_address_array, x64_enabled
+
+CFG = LLCConfig(size_bytes=4096, ways=4, block_bytes=64)   # 16 sets
+
+
+def _assert_parity(segs, cfg, *, expect=None):
+    """Compressed result must equal expanding + exact scanning: same hit
+    count AND bit-identical (tags, age) state."""
+    res = simulate_segments(segs, cfg)
+    blocks = (traces.expand(segs) // cfg.block_bytes).astype(np.int32)
+    state, hits = _scan_trace(cold_state(cfg.sets, cfg.ways),
+                              jnp.asarray(blocks),
+                              sets=cfg.sets, ways=cfg.ways)
+    assert res.accesses == len(blocks)
+    assert res.hits == int(hits.sum())
+    np.testing.assert_array_equal(np.asarray(res.state[0]),
+                                  np.asarray(state[0]))
+    np.testing.assert_array_equal(np.asarray(res.state[1]),
+                                  np.asarray(state[1]))
+    if expect is not None:
+        for key, val in expect.items():
+            assert getattr(res, key) == val, (key, getattr(res, key), val)
+    return res
+
+
+def test_closed_form_cold_sweep():
+    # disjoint full sweep -> O(1) analytic path, hits = n - blocks
+    res = _assert_parity([Segment(0, 32, 20_000)], CFG,
+                         expect={"closed_form_segments": 1,
+                                 "round_scanned_segments": 0})
+    assert res.hits == 20_000 - 10_000
+
+
+def test_restreamed_region_splits_prefix_suffix():
+    # second pass over the same bytes: warm prefix round-scanned, the
+    # provably-evicted suffix closed-formed
+    res = _assert_parity([Segment(0, 32, 20_000), Segment(0, 32, 20_000)],
+                         CFG)
+    assert res.closed_form_segments >= 2
+    assert res.round_scanned_segments >= 1
+
+
+def test_small_warm_segments_round_scan():
+    _assert_parity([Segment(0, 32, 40), Segment(64, 32, 10),
+                    Segment(0, 32, 40)], CFG,
+                   expect={"closed_form_segments": 0,
+                           "round_scanned_segments": 3})
+
+
+def test_unaligned_bases_and_strides():
+    _assert_parity([Segment(17, 32, 1000), Segment(5000, 48, 333)], CFG)
+
+
+def test_stride_above_block_expands():
+    _assert_parity([Segment(0, 256, 500)], CFG,
+                   expect={"expanded_segments": 1})
+
+
+def test_single_set_geometry():
+    _assert_parity([Segment(0, 32, 500)],
+                   LLCConfig(size_bytes=128, ways=2, block_bytes=64))
+    _assert_parity([Segment(0, 32, 9000), Segment(0, 32, 9000)],
+                   LLCConfig(size_bytes=128, ways=2, block_bytes=64))
+
+
+def test_interleaved_window_parity():
+    win = traces.default_dbb_window(max_bursts=1500, chunk_bursts=16)
+    _assert_parity(win, CFG)
+
+
+def test_network_trace_prefix_parity():
+    segs = traces.window(traces.network_trace(max_ops=6), 50_000)
+    _assert_parity(segs, LLCConfig(size_bytes=64 * 1024, ways=8,
+                                   block_bytes=64))
+
+
+def test_hit_rate_segments_matches_hit_rate():
+    segs = [Segment(0, 32, 5000), Segment(1 << 20, 32, 3000)]
+    hr_seg = hit_rate_segments(segs, CFG)
+    blocks = (traces.expand(segs) // CFG.block_bytes).astype(np.int32)
+    assert abs(hr_seg - hit_rate(blocks, CFG)) < 1e-9
+
+
+def test_network_trace_burst_accounting():
+    stream_bursts = traces.total_bursts(traces.network_trace())
+    # every AccelOp's traffic appears, to burst rounding, in the trace
+    from repro.core.runtime import compile_network
+    traffic = sum(op.total_traffic for op in compile_network().accel_ops)
+    assert 0 <= stream_bursts - traffic // traces.BURST_BYTES < 10_000
+
+
+def test_interleave_preserves_bursts_and_content():
+    segs = traces.network_trace(max_ops=4)
+    inter = traces.interleave(segs, 64)
+    assert traces.total_bursts(inter) == traces.total_bursts(segs)
+    assert sorted(traces.expand(inter).tolist()) == \
+        sorted(traces.expand(segs).tolist())
+    assert max(s.count for s in inter) <= 64
+
+
+def test_window_clips_exactly():
+    segs = traces.network_trace(max_ops=4)
+    win = traces.window(segs, 12_345)
+    assert traces.total_bursts(win) == 12_345
+    np.testing.assert_array_equal(traces.expand(win),
+                                  traces.expand(segs)[:12_345])
+
+
+def test_warm_initial_state_disables_closed_form():
+    # a passed-in state may hold anything: the engine must not assume
+    # segment disjointness it can only prove within one call
+    warm = simulate_segments([Segment(0, 32, 4096)], CFG)
+    seg2 = [Segment(0, 64, CFG.sets * CFG.ways)]   # re-reads resident blocks
+    res = simulate_segments(seg2, CFG, state=warm.state)
+    blocks1 = (traces.expand([Segment(0, 32, 4096)])
+               // CFG.block_bytes).astype(np.int32)
+    blocks2 = (traces.expand(seg2) // CFG.block_bytes).astype(np.int32)
+    both = np.concatenate([blocks1, blocks2])
+    state, hits = _scan_trace(cold_state(CFG.sets, CFG.ways),
+                              jnp.asarray(both), sets=CFG.sets,
+                              ways=CFG.ways)
+    assert warm.hits + res.hits == int(hits.sum())
+    np.testing.assert_array_equal(np.asarray(res.state[0]),
+                                  np.asarray(state[0]))
+    np.testing.assert_array_equal(np.asarray(res.state[1]),
+                                  np.asarray(state[1]))
+
+
+def test_zero_stride_rejected():
+    with pytest.raises(ValueError, match="stride"):
+        simulate_segments([Segment(0, 0, 10)], CFG)
+
+
+def test_address_array_guards_overflow():
+    small = as_address_array([0, 1 << 20])
+    assert small.dtype in (jnp.int32, jnp.int64)
+    if not x64_enabled():
+        with pytest.raises(OverflowError):
+            as_address_array([1 << 40])
