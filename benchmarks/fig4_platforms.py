@@ -4,7 +4,7 @@ from __future__ import annotations
 from repro.core import platform_table
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     t = platform_table()
     rows = [("fig4/" + k.replace(" ", "_"), round(v, 4), "fps")
             for k, v in t.items() if k != "_meta"]

@@ -21,7 +21,7 @@ def load_cells(mesh: str = "pod") -> list[dict]:
     return cells
 
 
-def run() -> list[tuple]:
+def run(smoke: bool = False) -> list[tuple]:
     rows = []
     for mesh in ("pod", "multipod"):
         cells = load_cells(mesh)

@@ -1,10 +1,15 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,value,note`` CSV.  ``python -m benchmarks.run [--only fig5]``.
+``--smoke`` runs every suite on tiny grids (CI's benchmark job: proves
+the drivers execute end to end and emits ``BENCH_sweep.json`` without
+burning minutes of runner time).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -24,6 +29,8 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grids, assert JSON emission (CI)")
     args = ap.parse_args()
     suites = {args.only: SUITES[args.only]} if args.only else SUITES
     print("name,value,note")
@@ -31,7 +38,7 @@ def main() -> None:
     for name, fn in suites.items():
         t0 = time.time()
         try:
-            for row in fn():
+            for row in fn(smoke=args.smoke):
                 print(",".join(str(x) for x in row))
         except Exception as e:  # keep the suite going, flag at exit
             failed += 1
@@ -39,6 +46,11 @@ def main() -> None:
         print(f"_meta/{name}_seconds,{time.time()-t0:.1f},")
     if failed:
         raise SystemExit(f"{failed} suites failed")
+    if args.smoke and not args.only:
+        path = os.environ.get("BENCH_SWEEP_JSON", "BENCH_sweep.json")
+        with open(path) as f:           # smoke contract: JSON must exist
+            json.load(f)
+        print(f"_meta/bench_json,{path},valid")
 
 
 if __name__ == "__main__":

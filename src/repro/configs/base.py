@@ -130,7 +130,8 @@ class ModelConfig:
             rec = d * w * 2 + self.rglru_conv * w + 2 * w * 2 + w * d
             rec += mlp + 2 * d
             per_kind["rec"] = rec
-        total = sum(per_kind.get(k, per_kind.get("attn", 0)) for k in self.layer_kinds())
+        total = sum(per_kind.get(k, per_kind.get("attn", 0))
+                    for k in self.layer_kinds())
         if self.is_encoder_decoder:
             # encoder self-attn + mlp; decoder adds cross-attn
             total += self.num_encoder_layers * (attn + mlp + 2 * d)

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.cache import LLCConfig
 from repro.core.dram import DRAMConfig
 from repro.core.runtime import AccelOp, CommandStream
@@ -93,7 +95,14 @@ def _residency_fraction(op: AccelOp, mem: MemSystemConfig) -> float:
     return 0.5 * min(1.0, leftover / op.prev_ofmap_bytes)
 
 
-def op_cycles(op: AccelOp, acc: AccelConfig, mem: MemSystemConfig) -> dict:
+def op_cycles(op: AccelOp, acc: AccelConfig, mem: MemSystemConfig,
+              hit_rates: tuple[float, float, float] | None = None) -> dict:
+    """One AccelOp's cycle breakdown.  ``hit_rates`` overrides the
+    closed-form stream-locality model with measured (weight, ifmap,
+    ofmap) LLC hit rates — the sim-driven mode feeds the exact segment
+    simulator's per-layer rates here (``op_stream_hit_rates``).  The
+    interference eviction term still applies on top, so co-runner
+    modeling composes with either source."""
     l = op.layer
     if op.macs:
         util = min(1.0, (l.cin * l.ksize * l.ksize) / acc.atomic_c)
@@ -105,10 +114,14 @@ def op_cycles(op: AccelOp, acc: AccelConfig, mem: MemSystemConfig) -> dict:
     t_llc = mem.t_llc_cycles + mem.bus_delay_cycles
     t_dram = t_dram + mem.bus_delay_cycles
 
-    h_w = _stream_hit_rate(mem)
-    h_i = _stream_hit_rate(mem, resident_bonus=True,
-                           resident_frac=_residency_fraction(op, mem))
-    h_o = _stream_hit_rate(mem)
+    if hit_rates is not None:
+        scale = 1.0 - mem.llc_eviction_prob
+        h_w, h_i, h_o = (h * scale for h in hit_rates)
+    else:
+        h_w = _stream_hit_rate(mem)
+        h_i = _stream_hit_rate(mem, resident_bonus=True,
+                               resident_frac=_residency_fraction(op, mem))
+        h_o = _stream_hit_rate(mem)
 
     def stream_cycles(traffic, h):
         if traffic == 0:
@@ -132,14 +145,131 @@ def op_cycles(op: AccelOp, acc: AccelConfig, mem: MemSystemConfig) -> dict:
             "hit_rates": (h_w, h_i, h_o)}
 
 
+def op_stream_hit_rates(stream: CommandStream, mem: MemSystemConfig,
+                        max_ops: int | None = None
+                        ) -> list[tuple[float, float, float]]:
+    """Exact per-op (weight, ifmap, ofmap) LLC hit rates from the
+    compressed segment engine, one pass over the whole network's DBB
+    trace with LLC state carried across ops — so an op's ifmap reads
+    really do hit on its producer's still-resident ofmap blocks, and a
+    restreamed weight region really is warm.  This is what
+    ``mode="simulated"`` feeds into ``op_cycles`` in place of the
+    closed-form stream model (the ROADMAP item: the sim no longer just
+    validates the closed form, it can drive it)."""
+    from repro.core import traces
+    from repro.core.cache import simulate_segments
+
+    ops = stream.accel_ops[:max_ops] if max_ops else stream.accel_ops
+    if mem.llc is None:
+        return [(0.0, 0.0, 0.0)] * len(ops)
+    per_op = traces.network_op_segments(stream, max_ops)
+    flat = [s for segs in per_op for s in segs]
+    res = simulate_segments(flat, mem.llc, per_segment=True)
+    return _fold_op_stream_rates(per_op, res.per_segment_hits)
+
+
+def _fold_op_stream_rates(per_op, per_segment_hits
+                          ) -> list[tuple[float, float, float]]:
+    """Fold flat per-segment hit counts back into per-op (weight, ifmap,
+    ofmap) rates, following the op/stream structure of ``per_op``."""
+    rates: list[tuple[float, float, float]] = []
+    k = 0
+    for segs in per_op:
+        tot = {"weight": [0, 0], "ifmap": [0, 0], "ofmap": [0, 0]}
+        for s in segs:
+            tot[s.stream][0] += int(per_segment_hits[k])
+            tot[s.stream][1] += s.count
+            k += 1
+        rates.append(tuple(t[0] / t[1] if t[1] else 0.0
+                           for t in (tot["weight"], tot["ifmap"],
+                                     tot["ofmap"])))
+    return rates
+
+
+def op_stream_hit_rates_grid(stream: CommandStream,
+                             llc_configs: list[LLCConfig]
+                             ) -> list[list[tuple[float, float, float]]]:
+    """``op_stream_hit_rates`` for a whole geometry grid at once: the
+    full-network trace replays through the bucketed vmapped segment-lane
+    engine (``repro.core.sweep.segment_lane_hit_counts``), so an N-point
+    simulated Fig. 5 sweep costs a handful of compiled lane programs
+    instead of N serial whole-frame passes.  Returns one per-op rate
+    list per config, exactly what each ``accel_time_s(hit_rates=...)``
+    call needs."""
+    from repro.core import traces
+    from repro.core.sweep import segment_lane_hit_counts
+
+    per_op = traces.network_op_segments(stream)
+    flat = [s for segs in per_op for s in segs]
+    counts = segment_lane_hit_counts(flat, llc_configs)   # (n_cfg, S)
+    return [_fold_op_stream_rates(per_op, counts[g])
+            for g in range(len(llc_configs))]
+
+
 def accel_time_s(stream: CommandStream, acc: AccelConfig,
-                 mem: MemSystemConfig) -> dict:
-    per_layer = [op_cycles(op, acc, mem) for op in stream.accel_ops]
+                 mem: MemSystemConfig, *, mode: str = "model",
+                 hit_rates: list | None = None) -> dict:
+    """NVDLA-side frame time.  ``mode="model"`` uses the closed-form
+    stream-locality hit rates (the calibrated paper model);
+    ``mode="simulated"`` drives every layer's hit rates from the exact
+    segment simulator on that layer's real DBB trace (``hit_rates``
+    short-circuits the simulation when the caller already has them —
+    e.g. a sweep reusing one simulation across co-runner counts)."""
+    if mode not in ("model", "simulated"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "simulated" and hit_rates is None:
+        hit_rates = op_stream_hit_rates(stream, mem)
+    if hit_rates is not None and len(hit_rates) != len(stream.accel_ops):
+        raise ValueError(
+            f"{len(hit_rates)} hit-rate tuples for "
+            f"{len(stream.accel_ops)} accel ops — hit_rates must cover "
+            "every op of this stream")
+    if hit_rates is None:
+        per_layer = [op_cycles(op, acc, mem) for op in stream.accel_ops]
+    else:
+        per_layer = [op_cycles(op, acc, mem, hit_rates=hr)
+                     for op, hr in zip(stream.accel_ops, hit_rates)]
     cycles = sum(p["total"] for p in per_layer)
     return {
         "cycles": cycles,
         "seconds": cycles / acc.freq_hz,
         "per_layer": per_layer,
+        "mode": mode,
         "compute_bound_layers": sum(
             1 for p in per_layer if p["compute"] >= p["memory"]),
     }
+
+
+def recalibrate_stream_conflict(sim_hit_rates: dict) -> dict:
+    """Re-fit ``STREAM_CONFLICT_BLOCKS`` against a *simulated* Fig. 5
+    grid (``repro.core.sweep.sweep_llc()["sim_hit_rates"]``: {(size_kib,
+    block): exact hit rate}).
+
+    The closed form says h = (1 - 32/B) * n/(n + c) with n the cache's
+    block count; each grid point solves for c, the fit is their median
+    (robust to the few points where capacity effects the closed form
+    deliberately ignores dominate), and both the shipped and fitted
+    constants get an RMS report — benchmarks assert the shipped value
+    stays inside the simulated fit's neighbourhood instead of drifting
+    from the paper anchors."""
+    from repro.core.soc import llc_config_for
+
+    pts, fits = [], []
+    for (size, block), h in sim_hit_rates.items():
+        cfg = llc_config_for(size, block)
+        spatial = max(0.0, 1.0 - BURST_BYTES / block)
+        n = cfg.sets * cfg.ways
+        pts.append((spatial, n, h))
+        if 0.0 < h < spatial:
+            fits.append(n * (spatial / h - 1.0))
+    c_fit = float(np.median(fits)) if fits else STREAM_CONFLICT_BLOCKS
+
+    def rms(c: float) -> float:
+        err = [s * n / (n + c) - h for s, n, h in pts]
+        return float(np.sqrt(np.mean(np.square(err)))) if err else 0.0
+
+    return {"stream_conflict_blocks": c_fit,
+            "shipped": STREAM_CONFLICT_BLOCKS,
+            "rms_shipped": rms(STREAM_CONFLICT_BLOCKS),
+            "rms_fit": rms(c_fit),
+            "points": len(pts)}

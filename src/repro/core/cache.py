@@ -118,21 +118,33 @@ def sequential_burst_trace(n_bursts: int, burst_bytes: int,
 # --------------------------------------------------------------------------
 # compressed segment engine
 # --------------------------------------------------------------------------
+def _first_access(blocks, base, stride, block_bytes):
+    """Index (within the segment) of the first access landing in each of
+    `blocks` (accesses are base + j*stride, j in [0, count))."""
+    lo = blocks * block_bytes - base
+    return jnp.where(lo <= 0, 0, (lo + stride - 1) // stride)
+
+
+def _last_access(blocks, base, stride, count, block_bytes):
+    """Index of the last segment access landing in each of `blocks`."""
+    lo = blocks * block_bytes - base
+    return jnp.minimum(count - 1, (lo + block_bytes - 1) // stride)
+
+
 def _block_counts(blocks, base, stride, count, block_bytes):
     """Exact number of segment accesses landing in each block of `blocks`
     (accesses are base + j*stride for j in [0, count))."""
-    lo = blocks * block_bytes - base
-    j_lo = jnp.maximum(0, (lo + stride - 1) // stride)
-    j_lo = jnp.where(lo <= 0, 0, j_lo)
-    j_hi = jnp.minimum(count - 1,
-                       (lo + block_bytes - 1) // stride)
-    return (j_hi - j_lo + 1).astype(jnp.int32)
+    return (_last_access(blocks, base, stride, count, block_bytes)
+            - _first_access(blocks, base, stride, block_bytes)
+            + 1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("sets", "ways", "m_pad"))
+@functools.partial(jax.jit,
+                   static_argnames=("sets", "ways", "m_pad", "collect"))
 def _segment_rounds_grouped(state, b_firsts, n_blockss, bases, strides,
                             counts, block_bytes,
-                            *, sets: int, ways: int, m_pad: int):
+                            *, sets: int, ways: int, m_pad: int,
+                            collect: bool = False):
     """Per-set round scan over a *group* of segments (one device program
     per group, no per-segment dispatch).  Within a segment, round k
     retires, for every set at once, that set's k-th arriving block, with
@@ -141,7 +153,11 @@ def _segment_rounds_grouped(state, b_firsts, n_blockss, bases, strides,
     independent under LRU, so this is bit-identical to the per-access
     scan while cutting serial depth from O(count) to
     O(segments * n_blocks / sets).  Padding segments have count == 0 and
-    update nothing."""
+    update nothing.
+
+    Returns per-segment hit counts; with ``collect`` it also returns the
+    per-(segment, round, set) miss bits, from which the caller
+    reconstructs the exact missed-block runs the DRAM model consumes."""
     s_idx = jnp.arange(sets)
 
     def per_segment(carry, meta):
@@ -165,18 +181,20 @@ def _segment_rounds_grouped(state, b_firsts, n_blockss, bases, strides,
             tags = jnp.where(upd & touched, t[:, None], tags)
             age = jnp.where(upd,
                             jnp.where(touched, 0, age + a[:, None]), age)
-            hits = hits + jnp.sum(jnp.where(valid, a - 1 + hit, 0))
-            return (tags, age, hits), None
+            hits = hits + jnp.sum(jnp.where(valid, a - 1 + hit, 0),
+                                  dtype=jnp.int32)
+            miss = (valid & ~hit) if collect else None
+            return (tags, age, hits), miss
 
         tags, age = carry
-        (tags, age, hits), _ = jax.lax.scan(
+        (tags, age, hits), miss = jax.lax.scan(
             round_k, (tags, age, jnp.int32(0)), jnp.arange(m_pad))
-        return (tags, age), hits
+        return (tags, age), (hits, miss)
 
-    state, hits = jax.lax.scan(
+    state, (hits, miss) = jax.lax.scan(
         per_segment, state,
         (b_firsts, n_blockss, bases, strides, counts))
-    return state, jnp.sum(hits)
+    return state, hits, miss
 
 
 class _TouchedBlocks:
@@ -241,6 +259,140 @@ def _segment_closed_form(state, b_first, n_blocks, a_interior, a_last,
     return (tags, age)
 
 
+# --------------------------------------------------------------------------
+# segment-lane engine: geometry as *traced* operands
+# --------------------------------------------------------------------------
+def segment_lane_scan(bases, strides, counts, r_needed, cold,
+                      sets, ways, block_bytes,
+                      *, max_sets: int, max_ways: int, r_pad: int):
+    """One sweep lane's exact segment replay with *runtime* geometry.
+
+    ``bases/strides/counts`` are (S,) int32 segment streams (count == 0
+    entries are padding and update nothing); ``sets/ways/block_bytes``
+    are traced scalars bounded by the static ``max_sets``/``max_ways``
+    paddings, so ``jax.vmap`` over lanes turns a whole geometry grid
+    into one compiled program (``repro.core.sweep.segment_lane_hit_counts``).
+    ``r_needed``/``cold`` are host-side execution plans: the number of
+    round-scan rounds this segment needs (an upper bound across the
+    vmapped lanes — extra rounds are masked no-ops, missing rounds would
+    be wrong) and whether the segment's byte range is provably disjoint
+    from everything replayed before it.
+
+    Per segment the update is the same exact decomposition the
+    single-geometry engine uses, expressed uniformly so every lane runs
+    the same program:
+
+    * a per-set round scan retires the first min(n_blocks, ways*sets)
+      blocks (one block per set per round, all intra-block burst repeats
+      folded into one LRU touch) in ``r_needed`` dynamic rounds — zero
+      for a ``cold`` segment, whose arrivals provably all miss;
+    * the rest of the segment finishes with a closed-form suffix: after
+      `ways` arrivals in every set the cache provably holds exactly
+      those arrivals — whatever was resident before — so every suffix
+      block misses and victims cycle through the ways oldest-first (for
+      a ``cold`` segment the "suffix" is the whole segment, with any
+      per-set arrival count).  The final occupants and their last-touch
+      timestamps are written directly.
+
+    LRU is tracked as a global last-touch timestamp (recency order, and
+    so every victim choice including first-index tie-breaks, is
+    identical to the per-set age counters of the reference simulator).
+    State is laid out (ways, sets) — way-reductions run over the small
+    leading axis with sets contiguous, which is what XLA:CPU vectorizes
+    well.  Requires stride <= block_bytes for every (segment, lane)
+    pair — the caller checks; DBB traces are 32 B-stride so every
+    standard geometry qualifies.  Returns per-segment hit counts (S,)
+    int32; hit counts are bit-identical to expanding the trace and
+    running the exact per-access scan at that geometry.
+    """
+    s_idx = jnp.arange(max_sets, dtype=jnp.int32)
+    q_idx = jnp.arange(max_ways, dtype=jnp.int32)
+    set_mask = s_idx < sets
+    way_mask = q_idx < ways
+    imax = jnp.iinfo(jnp.int32).max
+    bb = block_bytes
+
+    def per_segment(carry, meta):
+        tags, ts, counter = carry          # (max_ways, max_sets) x2, scalar
+        base, stride, count, rounds, is_cold = meta
+        live = count > 0
+        b_first = base // bb
+        b_last = (base + (count - 1) * stride) // bb
+        n_blocks = jnp.where(live, b_last - b_first + 1, 0)
+        full = ways * sets
+        n_pre = jnp.where(is_cold, 0, jnp.minimum(n_blocks, full))
+        off = jnp.where(set_mask, (s_idx - b_first) % sets, 0)
+
+        def round_k(k, inner):
+            tags, ts, hits = inner
+            i = off + jnp.int32(k) * sets  # block ordinal within segment
+            v = set_mask & (i < n_pre) & live
+            blocks = b_first + i
+            t = (blocks // sets).astype(jnp.int32)
+            j_lo = _first_access(blocks, base, stride, bb)
+            j_hi = _last_access(blocks, base, stride, count, bb)
+            a = (j_hi - j_lo + 1).astype(jnp.int32)
+            # one fused reduction picks the touched way: a matching tag
+            # wins outright (key -1, unique per set), else the oldest
+            # real way (padded ways pinned to int32 max; first-index
+            # tie-breaks match the reference argmin/argmax exactly)
+            key = jnp.where(tags == t[None, :], -1,
+                            jnp.where(way_mask[:, None], ts, imax))
+            way = jnp.argmin(key, axis=0)
+            hit = jnp.take_along_axis(key, way[None, :], axis=0)[0] == -1
+            touched = (q_idx[:, None] == way[None, :]) & v[None, :]
+            tags = jnp.where(touched, t[None, :], tags)
+            ts = jnp.where(touched,
+                           (counter + j_hi[None, :] + 1).astype(jnp.int32),
+                           ts)
+            hits = hits + jnp.sum(jnp.where(v, a - 1 + hit, 0),
+                                  dtype=jnp.int32)
+            return (tags, ts, hits)
+
+        tags, ts, hits = jax.lax.fori_loop(
+            0, jnp.minimum(rounds, r_pad), round_k,
+            (tags, ts, jnp.int32(0)))
+
+        # closed-form suffix: everything past the round-scanned prefix
+        # (the whole segment when cold)
+        sb_first = b_first + n_pre
+        n_suf = jnp.maximum(n_blocks - n_pre, 0)
+        has_suf = n_suf > 0
+        off_suf = jnp.where(set_mask, (s_idx - sb_first) % sets, 0)
+        m_s = jnp.where(off_suf < n_suf,
+                        (n_suf - off_suf + sets - 1) // sets, 0)
+        victim_ts = jnp.where(way_mask[:, None], ts, imax)
+        rho = jnp.argsort(victim_ts, axis=0, stable=True)   # oldest first
+        jstar = m_s[None, :] - ((m_s[None, :] - 1 - q_idx[:, None]) % ways)
+        valid_q = (way_mask[:, None] & (jstar >= 1) & set_mask[None, :]
+                   & live)
+        blk = sb_first + off_suf[None, :] + (jstar - 1) * sets
+        t_star = (blk // sets).astype(jnp.int32)
+        ts_star = counter + _last_access(blk, base, stride, count, bb) + 1
+        old_t = jnp.take_along_axis(tags, rho, axis=0)
+        old_ts = jnp.take_along_axis(ts, rho, axis=0)
+        tags = tags.at[rho, s_idx[None, :]].set(
+            jnp.where(valid_q, t_star, old_t))
+        ts = ts.at[rho, s_idx[None, :]].set(
+            jnp.where(valid_q, ts_star.astype(jnp.int32), old_ts))
+        # every suffix access beyond a block's first touch hits
+        j_split = jnp.where(has_suf,
+                            _first_access(sb_first, base, stride, bb),
+                            count)
+        hits = hits + jnp.where(has_suf, (count - j_split) - n_suf, 0)
+        counter = counter + jnp.where(live, count, 0)
+        return (tags, ts, counter), hits
+
+    init = (jnp.full((max_ways, max_sets), -1, jnp.int32),
+            jnp.zeros((max_ways, max_sets), jnp.int32),
+            jnp.int32(0))
+    _, per_seg_hits = jax.lax.scan(
+        per_segment, init,
+        (bases, strides, counts, r_needed,
+         jnp.asarray(cold).astype(jnp.bool_)))
+    return per_seg_hits
+
+
 @dataclasses.dataclass
 class SegmentSimResult:
     hits: int
@@ -249,6 +401,8 @@ class SegmentSimResult:
     closed_form_segments: int    # retired with the O(1) analytic update
     round_scanned_segments: int  # retired with the per-set round scan
     expanded_segments: int       # fell back to the exact per-access scan
+    per_segment_hits: np.ndarray | None = None   # (n_segments,) int64
+    miss_runs: list | None = None  # [(first_block, n_blocks, seg_idx)]
 
     @property
     def hit_rate(self) -> float:
@@ -259,8 +413,21 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
 
 
-def simulate_segments(segments, cfg: LLCConfig, state=None
-                      ) -> SegmentSimResult:
+def _append_block_runs(runs: list, blocks: np.ndarray, idx: int) -> None:
+    """Compress a sorted array of distinct block indices into maximal
+    consecutive (first_block, n_blocks, segment_idx) runs."""
+    if blocks.size == 0:
+        return
+    cut = np.nonzero(np.diff(blocks) != 1)[0]
+    starts = np.concatenate([[0], cut + 1])
+    ends = np.concatenate([cut, [blocks.size - 1]])
+    for a, b in zip(starts, ends):
+        runs.append((int(blocks[a]), int(b - a + 1), idx))
+
+
+def simulate_segments(segments, cfg: LLCConfig, state=None, *,
+                      per_segment: bool = False,
+                      collect_miss_runs: bool = False) -> SegmentSimResult:
     """Replay a compressed DBB trace (iterable of objects/tuples with
     ``base, stride, count`` in bytes/bursts, stride > 0) through the
     LLC, optionally continuing from a prior (tags, age) ``state``.
@@ -274,8 +441,17 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
     loop performs no per-segment synchronization.  Hit counts and final
     state are bit-identical to expanding the segments and running
     ``simulate_trace`` on the concatenation.
+
+    ``per_segment`` additionally attributes hits to each input segment
+    (``result.per_segment_hits``, aligned with the input order — the
+    sim-driven accelerator model sums these by stream).
+    ``collect_miss_runs`` reconstructs the exact LLC-miss stream as
+    maximal runs of consecutive missed blocks in access order
+    (``result.miss_runs``) — the compressed currency of the closed-form
+    DRAM row model in ``repro.core.dram.segment_row_hits``.
     """
     sets, ways, bb = cfg.sets, cfg.ways, cfg.block_bytes
+    collect = collect_miss_runs
     touched = _TouchedBlocks()
     if state is None:
         state = cold_state(sets, ways)
@@ -286,29 +462,36 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
         touched.add(-(1 << 62), 1 << 62)
     accesses = 0
     n_cf = n_rs = n_ex = 0
-    hit_parts: list = []       # device scalars; summed once at the end
-    closed_form_hits = 0
-    # plan: classify every segment on the host, then execute, fusing
-    # consecutive round-scan segments that share an m_pad bucket
-    pending: list[tuple] = []  # (b_first, n_blocks, base, stride, count)
+    n_input = 0
+    # replay log, resolved to host values once at the end (device arrays
+    # are only synced after the whole trace is dispatched):
+    #   ("group", idxs, metas, hits_dev, miss_dev)
+    #   ("cf",    idx, first_block, n_blocks, hits_int)
+    #   ("ex",    idx, hit_bits_dev, blocks_dev)
+    order_log: list[tuple] = []
+    pending: list[tuple] = []  # (idx, (b_first, n_blocks, base, stride, cnt))
     pending_m = 0
 
     def flush():
         nonlocal state, pending, pending_m
         if not pending:
             return
-        k_pad = _next_pow2(len(pending))
-        pad = k_pad - len(pending)
-        metas = pending + [(0, 0, 0, 1, 0)] * pad
-        cols = list(np.asarray(metas, np.int32).T)
-        state, h = _segment_rounds_grouped(
-            state, *cols, bb, sets=sets, ways=ways, m_pad=pending_m)
-        hit_parts.append(h)
+        idxs = [i for i, _ in pending]
+        metas = [m for _, m in pending]
+        k_pad = _next_pow2(len(metas))
+        metas_p = metas + [(0, 0, 0, 1, 0)] * (k_pad - len(metas))
+        cols = list(np.asarray(metas_p, np.int32).T)
+        state, h, miss = _segment_rounds_grouped(
+            state, *cols, bb, sets=sets, ways=ways, m_pad=pending_m,
+            collect=collect)
+        order_log.append(("group", idxs, metas, h, miss))
         pending, pending_m = [], 0
 
-    for seg in segments:
-        base, stride, count = (seg if isinstance(seg, tuple)
-                               else (seg.base, seg.stride, seg.count))
+    from repro.core.traces import segment_tuple
+
+    for idx, seg in enumerate(segments):
+        n_input = idx + 1
+        base, stride, count = segment_tuple(seg)
         if count <= 0:
             continue
         if stride <= 0:
@@ -321,9 +504,10 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
             # blocks are non-contiguous: expand and scan exactly
             flush()
             addrs = (base + jnp.arange(count) * stride) // bb
-            state, h = _scan_trace(state, addrs.astype(jnp.int32),
+            blocks_dev = addrs.astype(jnp.int32)
+            state, h = _scan_trace(state, blocks_dev,
                                    sets=sets, ways=ways)
-            hit_parts.append(jnp.sum(h, dtype=jnp.int32))
+            order_log.append(("ex", idx, h, blocks_dev))
             touched.add(base // bb, (base + (count - 1) * stride) // bb)
             n_ex += 1
             continue
@@ -344,8 +528,8 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
             m = _next_pow2(ways + 1)
             if pending and m != pending_m:
                 flush()
-            pending.append((b_first, split_block - b_first, base, stride,
-                            j_split))
+            pending.append((idx, (b_first, split_block - b_first, base,
+                                  stride, j_split)))
             pending_m = m
             flush()
             n_rs += 1
@@ -357,7 +541,8 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
             state = _segment_closed_form(
                 state, split_block, n_blocks_suf, bb // stride, a_last,
                 sets=sets, ways=ways)
-            closed_form_hits += suf_count - n_blocks_suf
+            order_log.append(("cf", idx, split_block, n_blocks_suf,
+                              suf_count - n_blocks_suf))
             n_cf += 1
             touched.add(b_first, b_last)
             continue
@@ -370,22 +555,63 @@ def simulate_segments(segments, cfg: LLCConfig, state=None
             state = _segment_closed_form(
                 state, b_first, n_blocks, a_int, a_last,
                 sets=sets, ways=ways)
-            closed_form_hits += count - n_blocks
+            order_log.append(("cf", idx, b_first, n_blocks,
+                              count - n_blocks))
             n_cf += 1
         else:
             m = _next_pow2(-(-n_blocks // sets))
             if pending and m != pending_m:
                 flush()
-            pending.append((b_first, n_blocks, base, stride, count))
+            pending.append((idx, (b_first, n_blocks, base, stride, count)))
             pending_m = m
             n_rs += 1
         touched.add(b_first, b_last)
     flush()
-    hits = closed_form_hits + int(sum(int(h) for h in hit_parts))
+
+    # resolve the log: total hits, optional per-segment attribution and
+    # miss-run reconstruction — device arrays sync here, once
+    hits = 0
+    per_seg = np.zeros(n_input, np.int64) if per_segment else None
+    miss_runs: list | None = [] if collect else None
+    for entry in order_log:
+        if entry[0] == "group":
+            _, idxs, metas, h_dev, miss_dev = entry
+            h = np.asarray(h_dev)
+            hits += int(h[:len(idxs)].sum())
+            if per_seg is not None:
+                for j, i in enumerate(idxs):
+                    per_seg[i] += int(h[j])
+            if collect:
+                mb = np.asarray(miss_dev)        # (k_pad, m_pad, sets)
+                for j, (b_first, n_blocks, _b, _s, _c) in enumerate(metas):
+                    k_idx, s_np = np.nonzero(mb[j])
+                    if k_idx.size == 0:
+                        continue
+                    off = (s_np - b_first) % sets
+                    blocks = b_first + np.sort(off + k_idx * sets)
+                    _append_block_runs(miss_runs, blocks, idxs[j])
+        elif entry[0] == "cf":
+            _, i, first_block, n_blocks, h_int = entry
+            hits += h_int
+            if per_seg is not None:
+                per_seg[i] += h_int
+            if collect:
+                miss_runs.append((first_block, n_blocks, i))
+        else:                                    # "ex"
+            _, i, h_dev, blocks_dev = entry
+            h = np.asarray(h_dev)
+            hits += int(h.sum())
+            if per_seg is not None:
+                per_seg[i] += int(h.sum())
+            if collect:
+                _append_block_runs(miss_runs,
+                                   np.asarray(blocks_dev)[~h], i)
     return SegmentSimResult(hits=hits, accesses=accesses, state=state,
                             closed_form_segments=n_cf,
                             round_scanned_segments=n_rs,
-                            expanded_segments=n_ex)
+                            expanded_segments=n_ex,
+                            per_segment_hits=per_seg,
+                            miss_runs=miss_runs)
 
 
 def hit_rate_segments(segments, cfg: LLCConfig) -> float:

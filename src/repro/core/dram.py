@@ -6,7 +6,12 @@ banks, FR-FCFS): per access the latency is
     row hit   -> tCAS
     row miss  -> tRP + tRCD + tCAS        (precharge + activate + CAS)
 
-simulated exactly with a ``lax.scan`` carrying the open row per bank.
+simulated exactly with a ``lax.scan`` carrying the open row per bank —
+or, for stride-run segment streams (the compressed DBB traces of
+``repro.core.traces`` and the LLC miss runs the segment engine emits),
+computed in closed form by ``segment_row_hits``: rows touched per
+segment, per-bank open-row carry across segment boundaries, bit
+-identical to the per-access scan with O(segments * banks) work.
 FR-FCFS's *scheduling* effect (row hits served first under load) and
 inter-master contention are modeled at the queue level in
 ``repro.core.interference`` — this module is the deterministic service
@@ -19,6 +24,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,3 +69,85 @@ def row_hit_rate(byte_addrs, cfg: DRAMConfig) -> float:
         row_bytes=cfg.row_bytes, t_cas=cfg.t_cas_cycles,
         t_rcd=cfg.t_rcd_cycles, t_rp=cfg.t_rp_cycles)
     return float(jnp.mean((lats == cfg.t_cas_cycles).astype(jnp.float32)))
+
+
+# --------------------------------------------------------------------------
+# closed-form row model for stride-run segments
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RowHitResult:
+    row_hits: int                # accesses served from an open row
+    accesses: int
+    open_rows: np.ndarray        # final per-bank open row ids (-1 closed)
+    per_segment: np.ndarray      # (n_segments,) int64 row hits
+
+    @property
+    def row_hit_rate(self) -> float:
+        return self.row_hits / max(1, self.accesses)
+
+
+def _bank_first_last_rows(r0: int, r1: int, banks: int):
+    """For the contiguous row run [r0, r1]: each bank's first and last
+    visited row (full row ids), and which banks are visited at all."""
+    b = np.arange(banks, dtype=np.int64)
+    first = r0 + ((b - r0) % banks)
+    last = r1 - ((r1 - b) % banks)
+    visited = first <= r1
+    return first, last, visited
+
+
+def segment_row_hits(segments, cfg: DRAMConfig,
+                     open_rows: np.ndarray | None = None) -> RowHitResult:
+    """Row-hit count of a compressed stride-run trace, closed form.
+
+    Bit-identical to replaying the expanded trace through
+    ``access_latencies`` (tests/test_dram_segments.py, with Hypothesis),
+    with serial work O(segments * banks) instead of O(accesses):
+
+    * a segment with stride <= row_bytes sweeps the contiguous row run
+      [base//row_bytes, last//row_bytes]; every row is visited once,
+      contiguously, so all accesses beyond each row's first hit that
+      open row, and a row's *first* access can only hit via the open-row
+      state carried in from earlier segments — possible only for each
+      bank's first visited row (later visits to a bank always follow an
+      intra-segment activation of a different row of that bank);
+    * a segment with stride > row_bytes touches a strictly increasing,
+      gappy row sequence — rare (never produced by DBB streams or LLC
+      miss runs), replayed per access with the same open-row carry.
+
+    ``open_rows`` continues from a prior result's state (full row ids,
+    -1 = closed); segments may be ``Segment`` objects or
+    ``(base, stride, count)`` tuples, base/stride in bytes.
+    """
+    from repro.core.traces import segment_tuple
+
+    banks, rb = cfg.banks, cfg.row_bytes
+    rows_state = (np.full(banks, -1, np.int64) if open_rows is None
+                  else np.array(open_rows, np.int64, copy=True))
+    seg_list = [segment_tuple(s) for s in segments]
+    per_seg = np.zeros(len(seg_list), np.int64)
+    accesses = 0
+    for i, (base, stride, count) in enumerate(seg_list):
+        if count <= 0:
+            continue
+        if stride <= 0:
+            raise ValueError(f"segment stride must be positive: {stride}")
+        accesses += count
+        if stride > rb:
+            # gappy rows: every access opens (or re-hits) its own row
+            rows = (base + np.arange(count, dtype=np.int64) * stride) // rb
+            hits = 0
+            for r in rows:
+                b = int(r % banks)
+                hits += rows_state[b] == r
+                rows_state[b] = r
+            per_seg[i] = hits
+            continue
+        r0 = base // rb
+        r1 = (base + (count - 1) * stride) // rb
+        first, last, visited = _bank_first_last_rows(r0, r1, banks)
+        carry_hits = int((visited & (rows_state[:banks] == first)).sum())
+        per_seg[i] = count - (r1 - r0 + 1) + carry_hits
+        rows_state = np.where(visited, last, rows_state)
+    return RowHitResult(row_hits=int(per_seg.sum()), accesses=accesses,
+                        open_rows=rows_state, per_segment=per_seg)

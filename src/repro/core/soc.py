@@ -66,10 +66,13 @@ def cpu_time_s(stream: CommandStream, cpu: CpuConfig) -> float:
 
 
 def run_yolov3(soc: SoCConfig = SoCConfig(), *, co_runners: int = 0,
-               wss: str = "l1") -> FrameReport:
+               wss: str = "l1", mode: str = "model") -> FrameReport:
+    """One frame.  ``mode="simulated"`` drives every layer's LLC hit
+    rates from the exact segment simulator instead of the closed-form
+    stream model (see ``repro.core.accelerator.accel_time_s``)."""
     stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
     mem = with_corunners(soc.mem, co_runners, wss)
-    accel = accel_time_s(stream, soc.accel, mem)
+    accel = accel_time_s(stream, soc.accel, mem, mode=mode)
     cpu_s = cpu_time_s(stream, soc.cpu)
     return FrameReport(accel_s=accel["seconds"], cpu_s=cpu_s,
                        detail={"accel": accel, "stream": stream})
@@ -88,18 +91,33 @@ def llc_config_for(size_kib: float, block: int) -> LLCConfig:
 
 
 def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
-              blocks=(32, 64, 128), soc: SoCConfig = SoCConfig()) -> dict:
-    """Speedup of the NVDLA-side time vs a no-LLC design."""
+              blocks=(32, 64, 128), soc: SoCConfig = SoCConfig(),
+              mode: str = "model") -> dict:
+    """Speedup of the NVDLA-side time vs a no-LLC design.
+
+    ``mode="simulated"`` replays the whole network's compressed DBB
+    trace through the exact segment engine at every grid geometry —
+    one bucketed vmapped lane program for the entire grid
+    (``op_stream_hit_rates_grid``) — and feeds the measured per-layer
+    hit rates into the timing model: the cycle-exact-over-analytical
+    path.  The no-LLC baseline has nothing to simulate and is shared."""
     stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
     base = accel_time_s(stream, soc.accel,
                         dataclasses.replace(soc.mem, llc=None))["seconds"]
+    points = [(size, block) for block in blocks for size in sizes_kib]
+    rates_grid = None
+    if mode == "simulated":
+        from repro.core.accelerator import op_stream_hit_rates_grid
+
+        rates_grid = op_stream_hit_rates_grid(
+            stream, [llc_config_for(s, b) for s, b in points])
     out = {"no_llc_s": base, "grid": {}}
-    for block in blocks:
-        for size in sizes_kib:
-            mem = dataclasses.replace(soc.mem,
-                                      llc=llc_config_for(size, block))
-            t = accel_time_s(stream, soc.accel, mem)["seconds"]
-            out["grid"][(size, block)] = base / t
+    for i, (size, block) in enumerate(points):
+        mem = dataclasses.replace(soc.mem, llc=llc_config_for(size, block))
+        t = accel_time_s(
+            stream, soc.accel, mem, mode=mode,
+            hit_rates=rates_grid[i] if rates_grid else None)["seconds"]
+        out["grid"][(size, block)] = base / t
     return out
 
 

@@ -16,11 +16,15 @@ FAME-1 semantics on the paper's own topology.
 
 Performance: replay rides the chunked early-exit FAME-1 scheduler (the
 host-cycle scan stops as soon as the sink drains the trace, and all-stall
-host cycles are pre-compacted away — see ``repro.core.fame1``), and for
-hit-rate-only questions over long traces the compressed segment engine in
-``repro.core.cache``/``repro.core.traces`` avoids per-access replay
-entirely.  Address arrays go through ``repro.utils.env`` so 64-bit DBB
-addresses can never be silently truncated when x64 is disabled.
+host cycles are pre-compacted away — see ``repro.core.fame1``); for
+hit-rate-only questions the compressed segment engine in
+``repro.core.cache``/``repro.core.traces`` avoids per-access replay, and
+for latency *totals* ``simulate_dbb_segments`` composes it with the
+closed-form DRAM row model (``repro.core.dram.segment_row_hits``) so the
+whole pipeline result comes out of segment-level arithmetic — bit
+-identical to the per-access pipeline.  Address arrays go through
+``repro.utils.env`` so 64-bit DBB addresses can never be silently
+truncated when x64 is disabled.
 """
 from __future__ import annotations
 
@@ -126,3 +130,64 @@ def simulate_dbb_stream(byte_addrs, llc_cfg: LLCConfig,
     return MemPipelineResult(latencies=lats[:t],
                              total_cycles=jnp.sum(lats[:t]),
                              host_cycles=pipe.last_host_cycles)
+
+
+# --------------------------------------------------------------------------
+# segment-native totals: no per-access replay at all
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SegmentPipelineResult:
+    total_cycles: int            # == simulate_dbb_stream(...).total_cycles
+    accesses: int
+    llc_hits: int
+    dram_row_hits: int           # row hits among the LLC misses
+
+    @property
+    def llc_hit_rate(self) -> float:
+        return self.llc_hits / max(1, self.accesses)
+
+    @property
+    def mean_latency(self) -> float:
+        return self.total_cycles / max(1, self.accesses)
+
+
+def simulate_dbb_segments(segments, llc_cfg: LLCConfig,
+                          dram_cfg: DRAMConfig | None = None,
+                          t_llc_hit: int = 20) -> SegmentPipelineResult:
+    """Latency totals of the LLC -> DRAM pipeline over a *compressed*
+    DBB trace, with no per-access replay on either side.
+
+    The segment LLC engine classifies hits and emits the exact miss
+    stream as runs of consecutive blocks; the closed-form DRAM row model
+    counts row hits over those runs with per-bank open-row carry.  Since
+    every per-access latency is determined by (llc hit?, dram row hit?),
+    the totals are bit-identical to ``simulate_dbb_stream`` on the
+    expanded trace (tests/test_socsim.py):
+
+        total = T*t_llc_hit + misses*tCAS + row_misses*(tRP + tRCD)
+
+    Requires ``dram.row_bytes % llc.block_bytes == 0`` (every standard
+    geometry) so a missed block's row is independent of which burst in
+    the block missed.
+    """
+    from repro.core.cache import simulate_segments
+    from repro.core.dram import segment_row_hits
+
+    dram_cfg = dram_cfg or DRAMConfig()
+    bb = llc_cfg.block_bytes
+    if dram_cfg.row_bytes % bb:
+        raise ValueError(
+            f"row_bytes {dram_cfg.row_bytes} not a multiple of block_bytes "
+            f"{bb}: a block could straddle rows; use simulate_dbb_stream")
+    res = simulate_segments(segments, llc_cfg, collect_miss_runs=True)
+    row = segment_row_hits([(b * bb, bb, c) for b, c, _ in res.miss_runs],
+                           dram_cfg)
+    misses = res.accesses - res.hits
+    row_misses = misses - row.row_hits
+    total = (res.accesses * t_llc_hit
+             + misses * dram_cfg.t_cas_cycles
+             + row_misses * (dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles))
+    return SegmentPipelineResult(total_cycles=int(total),
+                                 accesses=res.accesses,
+                                 llc_hits=res.hits,
+                                 dram_row_hits=row.row_hits)

@@ -2,34 +2,48 @@
 
 The seed path ran every sweep point through its own ``lax.scan`` —
 and because ``simulate_trace`` specializes on (sets, ways), every
-geometry was a fresh XLA compile.  Here the (tags, age) state is padded
-to the largest geometry in the sweep and the exact LLC scan is
-``jax.vmap``-ed over per-lane (sets, ways, block_bytes) scalars, so the
-entire Fig. 5 LLC grid (and the Fig. 6 interference grid, which vmaps
-over per-lane *traces*) compiles once and runs as a single device
-program.  Padded ways are masked out of both tag match and victim
-selection, so each lane is bit-identical to the unbatched simulator
+geometry was a fresh XLA compile.  Two batched engines fix that, both
+padding state to the largest geometry and ``jax.vmap``-ing the exact
+LLC update over per-lane (sets, ways, block_bytes) scalars so a whole
+grid compiles once and runs as a single device program:
+
+* the **per-access engine** (``batched_hits``/``batched_hits_per_trace``)
+  scans an expanded byte trace — per-access hit *bits*, serial depth
+  O(accesses);
+* the **segment-lane engine** (``segment_lane_hit_counts``/``_rates``)
+  replays the *compressed* trace of ``repro.core.traces`` directly —
+  the geometry-traced segment kernel of ``repro.core.cache`` retires a
+  whole (base, stride, count) run per step, so serial depth is
+  O(segments * max_ways) and full-frame multi-config sweeps (the trace
+  lengths Fig. 5/6 actually need) fit in one program.
+
+Padded ways are masked out of both tag match and victim selection, so
+each lane is bit-identical to the unbatched simulator at that geometry
 (tests/test_sweep.py).
 
 Public API:
-* ``batched_hit_rates``   — (configs,) hit rates of one byte trace;
-* ``batched_hits``        — the raw per-access hit bits per lane;
-* ``sweep_llc``           — Fig. 5 grid: closed-form speedups + vmapped
-                            simulated hit rates on a real DBB window;
-* ``sweep_interference``  — Fig. 6 grid: closed-form slowdowns + vmapped
-                            simulated hit rates under BwWrite co-runners.
+* ``batched_hit_rates``        — (configs,) hit rates of one byte trace;
+* ``batched_hits``             — the raw per-access hit bits per lane;
+* ``segment_lane_hit_counts``  — (configs, segments) compressed-trace
+                                 hit counts, shared or per-lane traces;
+* ``segment_lane_hit_rates``   — the per-lane rates thereof;
+* ``sweep_llc``           — Fig. 5 grid: closed-form speedups + exact
+                            segment-lane hit rates, windowed or full
+                            frame;
+* ``sweep_interference``  — Fig. 6 grid: closed-form slowdowns + exact
+                            segment-lane hit rates and closed-form DRAM
+                            row-hit rates under BwWrite co-runners.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import LLCConfig
 from repro.core import traces
+from repro.core.cache import LLCConfig
 from repro.utils.env import as_address_array
 
 
@@ -111,6 +125,186 @@ def segment_sweep_hit_rates(segments, configs: list[LLCConfig]
                        for c in configs], np.float64)
 
 
+# --------------------------------------------------------------------------
+# segment-lane engine: vmapped segment replay over runtime geometry
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=32)
+def _lane_engine(max_sets: int, max_ways: int, r_pad: int,
+                 per_lane_trace: bool):
+    from repro.core.cache import segment_lane_scan
+
+    in_axes = ((0, 0, 0, 0, 0, 0, 0, 0) if per_lane_trace
+               else (None, None, None, None, None, 0, 0, 0))
+    return jax.jit(jax.vmap(
+        functools.partial(segment_lane_scan, max_sets=max_sets,
+                          max_ways=max_ways, r_pad=r_pad),
+        in_axes=in_axes))
+
+
+def _lane_plan(trace: list, configs: list[LLCConfig]
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side execution plan for one segment stream over a lane
+    bucket: per segment, the round-scan rounds needed (max across the
+    bucket's geometries — extra rounds in other lanes are masked no-ops)
+    and whether the segment is provably cold (byte range disjoint, with
+    block-alignment slack, from every earlier segment — all its arrivals
+    miss in every lane, so the closed form needs no rounds at all)."""
+    from repro.core.cache import _TouchedBlocks
+
+    metas = [_segment_tuple(s) for s in trace]
+    base = np.asarray([m[0] for m in metas], np.int64)
+    stride = np.asarray([m[1] for m in metas], np.int64)
+    count = np.asarray([m[2] for m in metas], np.int64)
+    live = count > 0
+    last = base + np.maximum(count - 1, 0) * stride
+    slack = max(c.block_bytes for c in configs) - 1
+    touched = _TouchedBlocks()
+    cold = np.zeros(len(metas), bool)
+    for j in range(len(metas)):
+        if not live[j]:
+            continue
+        lo, hi = int(base[j] - slack), int(last[j] + slack)
+        cold[j] = not touched.overlaps(lo, hi)
+        touched.add(lo, hi)
+    r = np.zeros(len(metas), np.int64)
+    for c in configs:
+        nb = last // c.block_bytes - base // c.block_bytes + 1
+        r = np.maximum(r, np.minimum(c.ways, -(-nb // c.sets)))
+    r = np.where(live & ~cold, r, 0)
+    return r.astype(np.int32), cold
+
+
+_segment_tuple = traces.segment_tuple
+
+
+def _lane_meta_arrays(lanes: list[list]) -> tuple:
+    """Per-lane segment streams -> (n_lane, max_segments) int32 metadata
+    arrays, padded with count == 0 no-op segments."""
+    n_seg = max((len(t) for t in lanes), default=0)
+    shape = (len(lanes), max(1, n_seg))
+    bases = np.zeros(shape, np.int32)
+    strides = np.ones(shape, np.int32)
+    counts = np.zeros(shape, np.int32)
+    for i, trace in enumerate(lanes):
+        for j, seg in enumerate(trace):
+            bases[i, j], strides[i, j], counts[i, j] = _segment_tuple(seg)
+    return jnp.asarray(bases), jnp.asarray(strides), jnp.asarray(counts)
+
+
+def _check_lane_support(lanes, configs) -> None:
+    int32_max = np.iinfo(np.int32).max
+    min_block = min(c.block_bytes for c in configs)
+    for trace in lanes:
+        total = 0
+        for seg in trace:
+            base, stride, count = _segment_tuple(seg)
+            if count <= 0:
+                continue
+            total += count
+            if stride <= 0 or stride > min_block:
+                raise ValueError(
+                    f"segment stride {stride} outside (0, {min_block}] — "
+                    "the segment-lane engine needs stride <= block_bytes "
+                    "in every lane; use segment_sweep_hit_rates for "
+                    "sparse-stride traces")
+            if base + count * stride > int32_max:
+                raise OverflowError(
+                    "segment addresses exceed int32 — the lane engine "
+                    "keeps metadata in 32-bit; rebase the trace")
+        if total > int32_max:
+            raise OverflowError(
+                f"lane trace has {total} accesses — the lane engine's "
+                "global LRU timestamp is int32; split multi-frame sweeps "
+                "into per-frame lane calls")
+
+
+def _lane_buckets(configs: list[LLCConfig], waste: int = 2) -> list[list[int]]:
+    """Partition lane indices into buckets of comparable set counts so a
+    2-set lane doesn't pay a 4096-set lane's padding: lanes sorted by
+    descending sets, a new bucket whenever a lane has fewer than
+    1/`waste` of its bucket's maximum.  A homogeneous grid stays one
+    bucket (one compiled program)."""
+    order = sorted(range(len(configs)), key=lambda i: -configs[i].sets)
+    buckets: list[list[int]] = []
+    bucket_max = None
+    for i in order:
+        if bucket_max is None or configs[i].sets * waste < bucket_max:
+            buckets.append([])
+            bucket_max = configs[i].sets
+        buckets[-1].append(i)
+    return buckets
+
+
+def segment_lane_hit_counts(segments, configs: list[LLCConfig]
+                            ) -> np.ndarray:
+    """(n_cfg, n_segments) exact per-segment LLC hit counts of a
+    compressed trace, geometry lanes vmapped into compiled device
+    programs.
+
+    ``segments`` is either one shared trace (list of ``Segment``/tuples,
+    the Fig. 5 shape: one DBB stream, many geometries) or a list of
+    per-lane traces (the Fig. 6 shape: one geometry, many co-runner
+    mixes) — per-lane streams are padded to the longest lane with
+    count-0 no-op segments.  Unlike ``batched_hits`` the trace is never
+    expanded: serial depth is O(segments * max_ways), not O(accesses),
+    so full-frame multi-config sweeps are feasible.  Lanes with wildly
+    different set counts are bucketed (``_lane_buckets``) so padding
+    waste stays bounded — a homogeneous grid is exactly one program.
+    Hit counts are bit-identical to the expanded-trace ``batched_hits``
+    per lane (tests/test_sweep.py)."""
+    per_lane = bool(segments) and isinstance(segments[0], list)
+    lanes = segments if per_lane else [list(segments)] * len(configs)
+    if per_lane and len(lanes) != len(configs):
+        raise ValueError(f"{len(lanes)} lane traces for "
+                         f"{len(configs)} configs")
+    _check_lane_support(lanes, configs)
+    n_seg = max((len(t) for t in lanes), default=0)
+    out = np.zeros((len(configs), max(1, n_seg)), np.int64)
+    for bucket in _lane_buckets(configs):
+        cfgs_b = [configs[i] for i in bucket]
+        sets, ways, blocks, max_sets, max_ways = _geometry_arrays(cfgs_b)
+        engine = _lane_engine(max_sets, max_ways, max_ways, per_lane)
+        if per_lane:
+            traces_b = [lanes[i] for i in bucket]
+            bases, strides, counts = _lane_meta_arrays(traces_b)
+            plans = [_lane_plan(t, cfgs_b) for t in traces_b]
+            s_pad = bases.shape[1]
+            r_needed = np.zeros((len(bucket), s_pad), np.int32)
+            cold = np.zeros((len(bucket), s_pad), bool)
+            for row, (r, c) in enumerate(plans):
+                r_needed[row, :len(r)] = r
+                cold[row, :len(c)] = c
+            r_needed, cold = jnp.asarray(r_needed), jnp.asarray(cold)
+        else:
+            bases, strides, counts = (a[0] for a in
+                                      _lane_meta_arrays(lanes[:1]))
+            r, c = _lane_plan(lanes[0], cfgs_b)
+            s_pad = int(bases.shape[0])          # >= 1 even for [] traces
+            r_pad_arr = np.zeros(s_pad, np.int32)
+            c_pad = np.zeros(s_pad, bool)
+            r_pad_arr[:len(r)] = r
+            c_pad[:len(c)] = c
+            r_needed, cold = jnp.asarray(r_pad_arr), jnp.asarray(c_pad)
+        hits = np.asarray(engine(bases, strides, counts, r_needed, cold,
+                                 sets, ways, blocks), np.int64)
+        for row, i in enumerate(bucket):
+            out[i, :hits.shape[1]] = hits[row]
+    return out
+
+
+def segment_lane_hit_rates(segments, configs: list[LLCConfig]
+                           ) -> np.ndarray:
+    """(n_cfg,) exact hit rates — ``segment_lane_hit_counts`` over the
+    per-lane access totals."""
+    per_lane = bool(segments) and isinstance(segments[0], list)
+    lanes = segments if per_lane else [list(segments)] * len(configs)
+    hits = segment_lane_hit_counts(segments, configs).sum(axis=1)
+    accesses = np.asarray(
+        [max(1, sum(max(0, _segment_tuple(s)[2]) for s in t))
+         for t in lanes], np.int64)
+    return hits / accesses
+
+
 def batched_hits_per_trace(byte_addrs_2d, configs: list[LLCConfig]
                            ) -> jax.Array:
     """Like ``batched_hits`` but with one trace per lane (n_cfg, T) —
@@ -139,121 +333,145 @@ def grid_configs(sizes_kib, blocks) -> dict[tuple, LLCConfig]:
 
 def sweep_llc(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
               blocks=(32, 64, 128), soc=None,
-              window_bursts: int = 4096) -> dict:
+              window_bursts: int | None = 4096) -> dict:
     """Fig. 5, batched: the closed-form timing grid (`grid`, `no_llc_s`)
     plus exact simulated hit rates for every geometry (`sim_hit_rates`)
-    from a single vmapped program over a real interleaved DBB window."""
+    from a single vmapped segment-lane program.
+
+    ``window_bursts=None`` simulates the *entire* YOLOv3 frame (at
+    stream granularity — the whole-network compressed trace); an integer
+    clips to an arbiter-interleaved window of a representative layer as
+    before.  Either way the trace stays compressed end to end: serial
+    depth scales with segment count, not burst count."""
     from repro.core.soc import SoCConfig, llc_sweep as _closed_form
 
     soc = soc or SoCConfig()
     out = _closed_form(sizes_kib=sizes_kib, blocks=blocks, soc=soc)
     cfgs = grid_configs(sizes_kib, blocks)
-    win = traces.default_dbb_window(max_bursts=window_bursts)
-    addrs = traces.expand(win)
-    rates = batched_hit_rates(addrs, list(cfgs.values()))
+    if window_bursts is None:
+        win = traces.network_trace()
+    else:
+        win = traces.default_dbb_window(max_bursts=window_bursts)
+    rates = segment_lane_hit_rates(win, list(cfgs.values()))
     out["sim_hit_rates"] = {key: float(r)
-                            for key, r in zip(cfgs, np.asarray(rates))}
+                            for key, r in zip(cfgs, rates)}
     out["window_bursts"] = traces.total_bursts(win)
     return out
-
-
-@functools.partial(jax.jit, static_argnames=("banks",))
-def _dram_row_hits(byte_addrs, miss, *, banks: int, row_bytes: int):
-    """Row-hit bit per access, where only LLC misses (`miss`) touch the
-    open-row state — the DRAM side of the pipeline, vmappable."""
-    row = byte_addrs // row_bytes
-    bank = (row % banks).astype(jnp.int32)
-    row_of_bank = (row // banks).astype(jnp.int32)
-
-    def step(open_rows, inp):
-        b, r, m = inp
-        hit = (open_rows[b] == r) & m
-        open_rows = jnp.where(m, open_rows.at[b].set(r), open_rows)
-        return open_rows, hit
-
-    init = jnp.full((banks,), -1, jnp.int32)
-    _, hits = jax.lax.scan(step, init, (bank, row_of_bank, miss))
-    return hits
 
 
 # --------------------------------------------------------------------------
 # Fig. 6 — interference sweep
 # --------------------------------------------------------------------------
-def _corunner_trace(llc: LLCConfig, n: int, wss: str, t_total: int,
-                    nvdla_addrs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """One lane's interleaved trace: 1 NVDLA burst then one write from
-    each of `n` BwWrite co-runners, repeated to `t_total` accesses.
-    Returns (byte_addrs, nvdla_mask).  Co-runner working sets: "llc"
-    wraps inside half the LLC (occupies it), "dram" streams far past it
-    (sweeps it), "l1" never reaches the shared fabric (no accesses)."""
+def corunner_segments(llc: LLCConfig, n: int, wss: str,
+                      nvdla_segs: list, chunk_bursts: int = 16
+                      ) -> tuple[list, np.ndarray]:
+    """One lane's interleaved trace, *compressed*: a `chunk_bursts`-burst
+    NVDLA chunk, then `chunk_bursts` 64 B write lines from each of `n`
+    BwWrite co-runners, round-robin — the DBB/front-bus arbiter at chunk
+    granularity.  Returns (segments, nvdla_label_mask); each co-runner's
+    stream stays a valid stride run (wraps in its working-set span split
+    at the wrap point).  Working sets: "llc" wraps inside half the LLC
+    (occupies it), "dram" streams far past it (sweeps it), "l1" never
+    reaches the shared fabric (no co-runner accesses)."""
     if wss == "l1":
         n = 0
-    period = 1 + n
-    slots = np.arange(t_total)
-    lane = slots % period
-    nvdla_mask = lane == 0
-    addrs = np.zeros(t_total, np.int64)
-    n_nv = int(nvdla_mask.sum())
-    addrs[nvdla_mask] = nvdla_addrs[np.arange(n_nv) % len(nvdla_addrs)]
-    for w in range(1, period):
-        m = lane == w
-        k = int(m.sum())
-        step = np.arange(k, dtype=np.int64) * 64          # 64 B lines
+    chunks = [c for s in nvdla_segs for c in s.split(chunk_bursts)]
+    spans_regions = []
+    for w in range(n):
         if wss == "llc":
             span = max(64, llc.size_bytes // 2)
-            region = 0x4000_0000 + (w - 1) * 0x0100_0000
-            addrs[m] = region + (step % span)
+            region = 0x4000_0000 + w * 0x0100_0000
         else:                                             # "dram"
             span = llc.size_bytes * 8
-            region = 0x6000_0000 + (w - 1) * 0x0800_0000
-            addrs[m] = region + (step % span)
-    return addrs, nvdla_mask
+            region = 0x6000_0000 + w * 0x0800_0000
+        # stagger start banks (2 KiB row offsets) like the NVDLA regions
+        # in repro.core.traces — co-runners don't all start on bank 0
+        region += (5 + 7 * w) * 2048
+        spans_regions.append((span // 64, region))
+    cursors = [0] * n
+    segs: list[traces.Segment] = []
+    labels: list[bool] = []
+    for chunk in chunks:
+        segs.append(chunk)
+        labels.append(True)
+        for w in range(n):
+            left = chunk.count
+            span_lines, region = spans_regions[w]
+            while left > 0:                   # split at working-set wrap
+                start = cursors[w] % span_lines
+                take = min(left, span_lines - start)
+                segs.append(traces.Segment(region + start * 64, 64, take,
+                                           f"bw{w}"))
+                labels.append(False)
+                cursors[w] += take
+                left -= take
+    return segs, np.asarray(labels)
 
 
 def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
-                       window_bursts: int = 4096) -> dict:
+                       window_bursts: int = 4096,
+                       chunk_bursts: int = 16) -> dict:
     """Fig. 6, batched: closed-form slowdown curves (`l1`/`llc`/`dram`)
-    plus, per (wss, n), the *simulated* NVDLA hit rate with co-runner
-    write streams physically interleaved into the trace (`sim_hit_rates`)
-    — all lanes one vmapped program."""
-    from repro.core.dram import DRAMConfig
+    plus, per (wss, n), the *simulated* NVDLA LLC hit rate with
+    co-runner write streams physically interleaved into the trace
+    (`sim_hit_rates`) — every lane a compressed segment stream.  All
+    interference lanes share one LLC geometry, so each lane runs one
+    exact segment-engine pass that yields per-segment hit attribution
+    *and* the exact LLC-miss runs together (the vmapped
+    ``segment_lane_hit_counts`` engine is the multi-*geometry* path;
+    replaying here a second time just for lane-parallel hit bits would
+    double the simulation cost).  DRAM row-hit rates come from the
+    closed-form row model over each lane's miss runs (misses of *all*
+    masters mix in the banks, so co-runner misses break the NVDLA
+    stream's row locality — the FR-FCFS disruption Fig. 6 attributes
+    the "dram" slowdown to)."""
+    from repro.core.cache import simulate_segments
+    from repro.core.dram import DRAMConfig, segment_row_hits
     from repro.core.soc import SoCConfig, interference_sweep as _closed_form
 
     soc = soc or SoCConfig()
     out = _closed_form(soc=soc, corunners=corunners)
     llc = soc.mem.llc or LLCConfig()
     dram = soc.mem.dram or DRAMConfig()
-    nvdla = traces.expand(traces.default_dbb_window(
-        max_bursts=window_bursts))
+    if window_bursts is None:
+        # full-frame chunk interleaving explodes to ~2M segments/lane —
+        # serially infeasible until segment-count compaction lands (see
+        # ROADMAP); refuse loudly rather than run for hours
+        raise NotImplementedError(
+            "full-frame interference sweeps need RLE segment compaction; "
+            "pass a window_bursts cap (the LLC sweep supports full "
+            "frames — its lanes stay at stream granularity)")
+    nvdla_segs = traces.default_dbb_window(max_bursts=window_bursts)
+    bb = llc.block_bytes
+    if dram.row_bytes % bb:
+        raise ValueError("row_bytes must be a multiple of block_bytes "
+                         "for the segment-native interference sweep")
     # l1-fitting co-runners never reach the shared fabric, so every
     # ('l1', n) lane is the solo-NVDLA trace — simulate it once and fan
     # the result out to all n below
-    lanes, traces_2d, masks, cfgs = [], [], [], []
-    for wss, ns in (("l1", (0,)), ("llc", corunners), ("dram", corunners)):
-        for n in ns:
-            a, m = _corunner_trace(llc, n, wss, window_bursts, nvdla)
-            lanes.append((wss, n))
-            traces_2d.append(a)
-            masks.append(m)
-            cfgs.append(llc)
-    stacked = np.stack(traces_2d)
-    hits = np.asarray(batched_hits_per_trace(stacked, cfgs))
-    # DRAM behind the LLC: misses of *all* masters mix in the banks, so
-    # co-runner misses break the NVDLA stream's row locality — the
-    # FR-FCFS disruption Fig. 6 attributes the "dram" slowdown to.
-    row_hits = np.asarray(jax.vmap(
-        functools.partial(_dram_row_hits, banks=dram.banks,
-                          row_bytes=dram.row_bytes))(
-        as_address_array(stacked, what="DBB trace"), jnp.asarray(~hits)))
     out["sim_hit_rates"] = {}
     out["sim_row_hit_rates"] = {}
-    for i, (wss, n) in enumerate(lanes):
-        nv = masks[i]
-        hr = float(hits[i][nv].mean())
-        nv_miss = nv & ~hits[i]
-        rh = float(row_hits[i][nv_miss].mean()) if nv_miss.any() else 1.0
-        for key in ([(wss, n)] if wss != "l1"
-                    else [("l1", m) for m in corunners]):
-            out["sim_hit_rates"][key] = hr
-            out["sim_row_hit_rates"][key] = rh
+    for wss, ns in (("l1", (0,)), ("llc", corunners), ("dram", corunners)):
+        for n in ns:
+            segs, nv = corunner_segments(llc, n, wss, nvdla_segs,
+                                         chunk_bursts)
+            res = simulate_segments(segs, llc, per_segment=True,
+                                    collect_miss_runs=True)
+            counts = np.asarray([s.count for s in segs], np.int64)
+            hr = float(res.per_segment_hits[nv].sum() / counts[nv].sum())
+            # exact miss runs of the whole lane -> closed-form row
+            # model, attributed back to the NVDLA's misses
+            runs = res.miss_runs
+            row = segment_row_hits([(b * bb, bb, c) for b, c, _ in runs],
+                                   dram)
+            run_is_nv = (np.asarray([nv[i] for _, _, i in runs], bool)
+                         if runs else np.zeros(0, bool))
+            nv_miss = int(sum(c for (_, c, i) in runs if nv[i]))
+            rh = (float(row.per_segment[run_is_nv].sum() / nv_miss)
+                  if nv_miss else 1.0)
+            keys = ([(wss, n)] if wss != "l1"
+                    else [("l1", m) for m in corunners])
+            for key in keys:
+                out["sim_hit_rates"][key] = hr
+                out["sim_row_hit_rates"][key] = rh
     return out

@@ -35,10 +35,15 @@ BURST_BYTES = 32       # NVDLA DBB minimum burst (paper sec. 4.1)
 
 # DBB address map: weights packed from 0, activations ping-pong in two
 # regions well above the weight heap (YOLOv3 needs ~62 MiB of weights
-# and < 16 MiB per feature map).
-WEIGHT_REGION = 0x0000_0000
-FMAP_REGION_A = 0x1000_0000
-FMAP_REGION_B = 0x1800_0000
+# and < 16 MiB per feature map).  The regions are staggered by distinct
+# DRAM-row offsets (row = 2 KiB, 32 banks -> 64 KiB bank-rotation
+# period): concurrent sequential streams advance through banks in
+# lockstep, and with bank-aligned bases they would all ride the *same*
+# bank forever, each interleave point closing the others' open row — an
+# address-map pathology real allocators don't produce.
+WEIGHT_REGION = 0x0000_0000            # bank offset  0
+FMAP_REGION_A = 0x1000_0000 + 11 * 2048   # bank offset 11
+FMAP_REGION_B = 0x1800_0000 + 22 * 2048   # bank offset 22
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +59,9 @@ class Segment:
         return self.count * self.stride
 
     def split(self, chunk_bursts: int) -> list["Segment"]:
-        """Cut into chunks of at most `chunk_bursts` bursts."""
+        """Cut into chunks of at most `chunk_bursts` bursts.  A zero- (or
+        negative-) count segment yields no chunks — never a zero-count
+        chunk that would expand to an empty array."""
         out = []
         done = 0
         while done < self.count:
@@ -63,6 +70,14 @@ class Segment:
                                self.stride, n, self.stream))
             done += n
         return out
+
+
+def segment_tuple(seg) -> tuple[int, int, int]:
+    """Normalize a ``Segment`` or raw ``(base, stride, count)`` tuple —
+    the one definition of the segment protocol every compressed-trace
+    consumer (LLC engine, DRAM row model, sweep lanes) unpacks through."""
+    return (seg if isinstance(seg, tuple)
+            else (seg.base, seg.stride, seg.count))
 
 
 def _bursts(n_bytes: int) -> int:
@@ -96,25 +111,36 @@ def op_segments(op: AccelOp, weight_base: int, ifmap_base: int,
     return segs
 
 
-def network_trace(stream: CommandStream | None = None,
-                  max_ops: int | None = None) -> list[Segment]:
-    """The whole accelerated network's DBB stream, compressed.
+def network_op_segments(stream: CommandStream | None = None,
+                        max_ops: int | None = None) -> list[list[Segment]]:
+    """Per-AccelOp DBB streams over the shared address map — the same
+    segments ``network_trace`` emits, kept grouped by op so per-layer
+    consumers (the sim-driven ``repro.core.accelerator`` hit rates) can
+    attribute hits to the op that issued them.
 
     Weight regions are packed in layer order; feature maps ping-pong
     between two regions so a consumer reads where its producer wrote.
     """
     stream = stream or compile_network()
     ops = stream.accel_ops[:max_ops] if max_ops else stream.accel_ops
-    segs: list[Segment] = []
+    per_op: list[list[Segment]] = []
     w_cursor = WEIGHT_REGION
     regions = (FMAP_REGION_A, FMAP_REGION_B)
     for i, op in enumerate(ops):
         ifmap_base = regions[i % 2]
         ofmap_base = regions[(i + 1) % 2]
-        segs.extend(op_segments(op, w_cursor, ifmap_base, ofmap_base))
+        per_op.append(op_segments(op, w_cursor, ifmap_base, ofmap_base))
         passes = max(1, op.weight_passes)
         w_cursor += op.weight_traffic // passes
-    return segs
+    return per_op
+
+
+def network_trace(stream: CommandStream | None = None,
+                  max_ops: int | None = None) -> list[Segment]:
+    """The whole accelerated network's DBB stream, compressed (the
+    flattened ``network_op_segments``)."""
+    return [seg for op_segs in network_op_segments(stream, max_ops)
+            for seg in op_segs]
 
 
 def interleave(segments: list[Segment], chunk_bursts: int = 64
@@ -142,15 +168,22 @@ def interleave(segments: list[Segment], chunk_bursts: int = 64
 
 
 def window(segments: list[Segment], max_bursts: int) -> list[Segment]:
-    """Clip a compressed trace to its first `max_bursts` accesses."""
+    """Clip a compressed trace to its first `max_bursts` accesses.
+
+    Zero-count segments (an input clipped at an exact chunk boundary, or
+    an already-empty segment) are dropped rather than kept as count-0
+    records: downstream consumers concatenate ``expand``-ed pieces and a
+    degenerate segment would contribute an empty array with nothing to
+    pin its dtype or base address."""
     out: list[Segment] = []
     left = max_bursts
     for seg in segments:
         if left <= 0:
             break
         n = min(seg.count, left)
-        out.append(dataclasses.replace(seg, count=n))
-        left -= n
+        if n > 0:
+            out.append(dataclasses.replace(seg, count=n))
+            left -= n
     return out
 
 
@@ -162,7 +195,7 @@ def expand(segments: list[Segment]) -> np.ndarray:
     """Materialize the exact per-access byte-address trace (int64 numpy;
     parity-test oracle — never needed on the fast path)."""
     parts = [s.base + np.arange(s.count, dtype=np.int64) * s.stride
-             for s in segments]
+             for s in segments if s.count > 0]
     if not parts:
         return np.zeros((0,), np.int64)
     return np.concatenate(parts)

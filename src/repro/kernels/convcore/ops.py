@@ -6,8 +6,6 @@ epilogue (bias + per-channel scale + ReLU), reshape back to NHWC.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -11,8 +11,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import init_caches, init_params
-from repro.sharding import active_rules, sharding_for
-from repro.types import Param, is_param, map_params, param_values
+from repro.sharding import sharding_for
+from repro.types import map_params, param_values
 
 
 def _sds(shape, dtype):

@@ -1,12 +1,12 @@
 """Model zoo public API."""
+from repro.models.decoding import (  # noqa: F401
+    decode_step,
+    init_caches,
+    prefill,
+)
 from repro.models.transformer import (  # noqa: F401
     forward,
     init_params,
     loss_fn,
     pattern_split,
-)
-from repro.models.decoding import (  # noqa: F401
-    decode_step,
-    init_caches,
-    prefill,
 )

@@ -38,10 +38,14 @@ def init_attention(key, cfg: ModelConfig) -> dict:
     d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)
     p = {
-        "wq": Param(_dense_init(ks[0], (d, nq, hd), d), ("embed", "heads", "head_dim")),
-        "wk": Param(_dense_init(ks[1], (d, nkv, hd), d), ("embed", "kv_heads", "head_dim")),
-        "wv": Param(_dense_init(ks[2], (d, nkv, hd), d), ("embed", "kv_heads", "head_dim")),
-        "wo": Param(_dense_init(ks[3], (nq, hd, d), nq * hd), ("heads", "head_dim", "embed")),
+        "wq": Param(_dense_init(ks[0], (d, nq, hd), d),
+                    ("embed", "heads", "head_dim")),
+        "wk": Param(_dense_init(ks[1], (d, nkv, hd), d),
+                    ("embed", "kv_heads", "head_dim")),
+        "wv": Param(_dense_init(ks[2], (d, nkv, hd), d),
+                    ("embed", "kv_heads", "head_dim")),
+        "wo": Param(_dense_init(ks[3], (nq, hd, d), nq * hd),
+                    ("heads", "head_dim", "embed")),
     }
     if cfg.attn_bias:
         p["bq"] = Param(jnp.zeros((nq, hd), jnp.float32), ("heads", "head_dim"))
@@ -137,7 +141,8 @@ def attend(params: dict, x: jax.Array, cfg: ModelConfig, *,
     if s % q_chunk != 0 or s <= q_chunk:
         q_chunk = s
     n_chunks = s // q_chunk
-    banded = bool(window) and kv_src is None and (window + q_chunk) <= t and n_chunks > 1
+    banded = (bool(window) and kv_src is None
+              and (window + q_chunk) <= t and n_chunks > 1)
 
     # Per-chunk remat: the backward pass recomputes scores/probs instead of
     # storing the O(chunk x kv_span) fp32 score matrices of every chunk —

@@ -181,7 +181,8 @@ def decode_step(params, caches, token: jax.Array, t: jax.Array,
     pattern, _, _ = pattern_split(cfg)
     x = L.embed_tokens(params["embed"], token, cfg)
     if cfg.is_encoder_decoder:
-        x = x + _sinusoid(t[None] if t.ndim == 0 else t, cfg.d_model).astype(x.dtype)[None]
+        pos = _sinusoid(t[None] if t.ndim == 0 else t, cfg.d_model)
+        x = x + pos.astype(x.dtype)[None]
 
     new_caches: dict = {}
     if "blocks" in caches:

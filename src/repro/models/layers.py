@@ -129,7 +129,8 @@ def apply_mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 def init_embeddings(key, cfg: ModelConfig) -> dict:
     v = padded_vocab(cfg)
     k1, k2 = jax.random.split(key)
-    p = {"embed": Param(_dense_init(k1, (v, cfg.d_model), cfg.d_model), ("vocab", "embed"))}
+    p = {"embed": Param(_dense_init(k1, (v, cfg.d_model), cfg.d_model),
+                        ("vocab", "embed"))}
     if not cfg.tie_embeddings:
         p["unembed"] = Param(
             _dense_init(k2, (cfg.d_model, v), cfg.d_model), ("embed", "vocab")

@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
 from repro.sharding import logical_constraint
 from repro.types import Param
-from repro.models.layers import _dense_init
 
 
 def _conv_channels(cfg: ModelConfig) -> int:
@@ -110,9 +110,9 @@ def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, unroll: bool = False):
     chunk_decay = jnp.exp(last[:, :, 0, :]).reshape(bb, nc, g, hg)  # (Bb,nc,g,hg)
 
     def body(carry, inp):
-        s_c, dec_c = inp                                      # (Bb,g,hg,n,p), (Bb,g,hg)
+        s_c, dec_c = inp                            # (Bb,g,hg,n,p), (Bb,g,hg)
         new = carry * dec_c[..., None, None] + s_c
-        return new, carry                                      # emit state *before* chunk
+        return new, carry                           # emit state *before* chunk
 
     init = jnp.zeros((bb, g, hg, n, p), x.dtype)
     final_state, prev_states = jax.lax.scan(
@@ -133,7 +133,8 @@ def apply_ssm(params: dict, x: jax.Array, cfg: ModelConfig, *,
     dt_ = x.dtype
     zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(dt_))
     z, xbc_raw, dtraw = _split_proj(zxbcdt, cfg)
-    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(dt_),
+                       params["conv_b"].astype(dt_))
     di, g, n = cfg.ssm_d_inner, cfg.ssm_ngroups, cfg.ssm_state
     xs = xbc[..., :di]
     B = xbc[..., di : di + g * n].reshape(*xbc.shape[:2], g, n)

@@ -19,7 +19,6 @@ resolver); all ``apply_*`` paths take plain value trees.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -23,7 +23,6 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
-from repro.models.layers import padded_vocab
 
 
 @dataclasses.dataclass

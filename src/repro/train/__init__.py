@@ -1,2 +1,11 @@
-from repro.train.optim import AdamWConfig, adamw_init, adamw_update, lr_schedule  # noqa: F401
-from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train.optim import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    lr_schedule,
+)
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_train_step,
+)

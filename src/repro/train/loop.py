@@ -24,7 +24,6 @@ import time
 from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import parse_collectives, roofline_terms
 from repro.train.optim import AdamWConfig, lr_schedule

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import yolov3
@@ -19,7 +18,6 @@ from repro.core.dram import DRAMConfig, access_latencies, row_hit_rate
 from repro.core.quant import calibrate, dequantize, quantize, quantize_conv_weights
 from repro.core.runtime import compile_network
 from repro.core.soc import (
-    SoCConfig,
     interference_sweep,
     llc_sweep,
     platform_table,
@@ -172,6 +170,51 @@ def test_platform_table_matches_fig4():
     # GPU ~5.5x faster than NVDLA (paper)
     ratio = t["titan xp (fp32)"] / t["nvdla (int8)"]
     assert 4.5 < ratio < 6.5
+
+
+def test_sim_driven_op_cycles_matches_paper_baseline():
+    """mode="simulated": every layer's hit rates come from the exact
+    segment simulator on its own DBB trace (LLC state carried across
+    ops).  The resulting frame time must still land on the paper's
+    67 ms NVDLA baseline — the simulator *drives* the model it used to
+    only validate."""
+    from repro.core.accelerator import op_stream_hit_rates
+
+    r = run_yolov3(mode="simulated")
+    assert 55 < r.accel_s * 1e3 < 80, "paper: 67 ms on NVDLA"
+    stream = r.detail["stream"]
+    rates = op_stream_hit_rates(stream, MemSystemConfig())
+    assert len(rates) == len(stream.accel_ops)
+    assert all(0.0 <= h <= 1.0 for hr in rates for h in hr)
+    # 64 B blocks over 32 B bursts: spatial locality floors streams near
+    # 0.5; ifmap streams may exceed it via producer-ofmap residency
+    weighted = [h for hr in rates for h in hr]
+    assert 0.35 < sum(weighted) / len(weighted) < 0.9
+
+
+def test_accel_time_s_mode_validation():
+    from repro.core.accelerator import AccelConfig, accel_time_s
+
+    stream = compile_network()
+    with pytest.raises(ValueError, match="mode"):
+        accel_time_s(stream, AccelConfig(), MemSystemConfig(),
+                     mode="cycle-exact")
+
+
+def test_recalibration_agrees_with_simulated_grid():
+    """The shipped closed-form constant must stay inside the simulated
+    fit's neighbourhood: re-fitting against exact full-frame hit rates
+    may not expose a materially better single constant."""
+    from repro.core.accelerator import recalibrate_stream_conflict
+    from repro.core.sweep import sweep_llc
+
+    sw = sweep_llc(sizes_kib=(0.5, 64, 1024), blocks=(32, 64, 128),
+                   window_bursts=20_000)
+    cal = recalibrate_stream_conflict(sw["sim_hit_rates"])
+    assert cal["points"] == 9
+    assert cal["rms_fit"] <= cal["rms_shipped"] + 1e-9
+    assert cal["rms_shipped"] < 0.25, \
+        "closed form has drifted far from the exact simulator"
 
 
 def test_llc_timing_model_vs_exact_sim():

@@ -10,9 +10,9 @@ Parity requirements (no Hypothesis — these must run everywhere):
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import traces
 from repro.core.cache import LLCConfig, simulate_trace
@@ -21,7 +21,10 @@ from repro.core.socsim import simulate_dbb_stream
 from repro.core.sweep import (
     batched_hits,
     batched_hit_rates,
+    corunner_segments,
     grid_configs,
+    segment_lane_hit_counts,
+    segment_lane_hit_rates,
     segment_sweep_hit_rates,
     sweep_interference,
     sweep_llc,
@@ -65,6 +68,72 @@ def test_segment_sweep_matches_expanded_scans():
         ref = float(jnp.mean(simulate_trace(
             blocks, sets=c.sets, ways=c.ways).astype(jnp.float32)))
         assert abs(got[i] - ref) < 1e-6, c
+
+
+# --------------------------------------------------------------------------
+# segment-lane engine (traced geometry)
+# --------------------------------------------------------------------------
+def test_segment_lanes_bitwise_parity_every_grid_geometry():
+    """The satellite parity requirement: segment-lane sweep hit rates
+    equal ``batched_hit_rates`` on the expanded trace for every grid
+    geometry — counts bit-identical, not approximately."""
+    segs = traces.window(traces.network_trace(max_ops=4), 25_000)
+    addrs = traces.expand(segs)
+    configs = list(grid_configs((0.5, 8, 64, 1024),
+                                (32, 64, 128, 256)).values())
+    counts = segment_lane_hit_counts(segs, configs)
+    bits = np.asarray(batched_hits(addrs, configs))
+    np.testing.assert_array_equal(counts.sum(axis=1), bits.sum(axis=1))
+    rates = segment_lane_hit_rates(segs, configs)
+    np.testing.assert_allclose(
+        rates, bits.mean(axis=1, dtype=np.float64), atol=0)
+
+
+def test_segment_lanes_per_segment_attribution():
+    segs = [traces.Segment(0, 32, 3000), traces.Segment(0, 32, 500),
+            traces.Segment(1 << 18, 32, 64)]
+    addrs = traces.expand(segs)
+    configs = [LLCConfig(4096, 4, 64), LLCConfig(64 * 1024, 8, 128)]
+    counts = segment_lane_hit_counts(segs, configs)
+    for i, c in enumerate(configs):
+        blocks = jnp.asarray((addrs // c.block_bytes).astype(np.int32))
+        bits = np.asarray(simulate_trace(blocks, sets=c.sets, ways=c.ways))
+        o, ref = 0, []
+        for s in segs:
+            ref.append(int(bits[o:o + s.count].sum()))
+            o += s.count
+        assert counts[i].tolist() == ref
+
+
+def test_segment_lanes_per_lane_traces():
+    """Fig. 6 shape: one geometry, per-lane traces padded to the
+    longest lane with no-op segments."""
+    llc = LLCConfig(64 * 1024, 8, 64)
+    nv = traces.default_dbb_window(max_bursts=768)
+    lanes, refs = [], []
+    for n in (0, 2):
+        segs, _ = corunner_segments(llc, n, "dram", nv, chunk_bursts=16)
+        lanes.append(segs)
+        blocks = (traces.expand(segs) // llc.block_bytes).astype(np.int32)
+        refs.append(int(np.asarray(simulate_trace(
+            jnp.asarray(blocks), sets=llc.sets, ways=llc.ways)).sum()))
+    counts = segment_lane_hit_counts(lanes, [llc, llc])
+    assert counts.sum(axis=1).tolist() == refs
+
+
+def test_segment_lanes_rejects_sparse_strides():
+    with np.testing.assert_raises(ValueError):
+        segment_lane_hit_counts([traces.Segment(0, 256, 100)],
+                                [LLCConfig(4096, 4, 64)])
+
+
+def test_sweep_llc_full_trace_mode():
+    """window_bursts=None runs the whole-network compressed trace."""
+    sw = sweep_llc(sizes_kib=(8,), blocks=(64,), window_bursts=None)
+    frame_bursts = traces.total_bursts(traces.network_trace())
+    assert sw["window_bursts"] == frame_bursts
+    (rate,) = sw["sim_hit_rates"].values()
+    assert 0.0 < rate < 1.0
 
 
 def test_sweep_llc_keeps_closed_form_grid_and_adds_sim():

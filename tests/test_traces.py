@@ -3,8 +3,8 @@ per-access reference simulator on every dispatch path (closed form,
 per-set round scan, prefix/suffix split, expand fallback)."""
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import traces
@@ -123,6 +123,59 @@ def test_window_clips_exactly():
     assert traces.total_bursts(win) == 12_345
     np.testing.assert_array_equal(traces.expand(win),
                                   traces.expand(segs)[:12_345])
+
+
+def test_window_drops_zero_count_segments():
+    """Windowing at an exact chunk boundary (or over an already-empty
+    input segment) must drop the degenerate record, not emit a count-0
+    segment that expands to an empty array."""
+    segs = [Segment(0, 32, 100), Segment(9999, 32, 0),
+            Segment(1 << 16, 32, 100)]
+    # clip lands exactly on the first segment's boundary
+    win = traces.window(segs, 100)
+    assert [s.count for s in win] == [100]
+    # the zero-count input segment disappears, the clip still lands
+    win = traces.window(segs, 150)
+    assert [s.count for s in win] == [100, 50]
+    assert all(s.count > 0 for s in win)
+    assert len(traces.expand(win)) == 150
+    assert as_address_array(traces.expand(win)).shape == (150,)
+
+
+def test_split_never_emits_zero_count_chunks():
+    assert Segment(0, 32, 0).split(16) == []
+    chunks = Segment(0, 32, 48).split(16)
+    assert [c.count for c in chunks] == [16, 16, 16]
+    assert Segment(64, 32, 1).split(16)[0].count == 1
+
+
+def test_per_segment_hits_and_miss_runs():
+    segs = [Segment(0, 32, 3000), Segment(0, 32, 500),
+            Segment(1 << 18, 32, 64), Segment(5000, 256, 100)]
+    res = simulate_segments(segs, CFG, per_segment=True,
+                            collect_miss_runs=True)
+    blocks = (traces.expand(segs) // CFG.block_bytes).astype(np.int32)
+    _, bits = _scan_trace(cold_state(CFG.sets, CFG.ways),
+                          jnp.asarray(blocks), sets=CFG.sets,
+                          ways=CFG.ways)
+    bits = np.asarray(bits)
+    o, ref = 0, []
+    for s in segs:
+        ref.append(int(bits[o:o + s.count].sum()))
+        o += s.count
+    assert res.per_segment_hits.tolist() == ref
+    # miss runs expand to exactly the missed blocks, in access order
+    got = np.concatenate([np.arange(n) + b for b, n, _ in res.miss_runs])
+    np.testing.assert_array_equal(got, blocks[~bits])
+    assert all(0 <= idx < len(segs) for _, _, idx in res.miss_runs)
+
+
+def test_network_op_segments_flatten_to_network_trace():
+    per_op = traces.network_op_segments(max_ops=6)
+    flat = [s for segs in per_op for s in segs]
+    assert flat == traces.network_trace(max_ops=6)
+    assert all(s.stream in ("weight", "ifmap", "ofmap")
+               for segs in per_op for s in segs)
 
 
 def test_warm_initial_state_disables_closed_form():
