@@ -34,23 +34,40 @@ def main() -> None:
     args = ap.parse_args()
     suites = {args.only: SUITES[args.only]} if args.only else SUITES
     print("name,value,note")
-    failed = 0
+    status: dict[str, tuple[bool, float, str]] = {}
     for name, fn in suites.items():
         t0 = time.time()
         try:
             for row in fn(smoke=args.smoke):
                 print(",".join(str(x) for x in row))
-        except Exception as e:  # keep the suite going, flag at exit
-            failed += 1
+            status[name] = (True, time.time() - t0, "")
+        except Exception as e:  # keep the remaining suites going
+            status[name] = (False, time.time() - t0,
+                            f"{type(e).__name__}: {e}")
             print(f"{name}/ERROR,{type(e).__name__},{e}", file=sys.stderr)
         print(f"_meta/{name}_seconds,{time.time()-t0:.1f},")
-    if failed:
-        raise SystemExit(f"{failed} suites failed")
+    json_note = ""
     if args.smoke and not args.only:
         path = os.environ.get("BENCH_SWEEP_JSON", "BENCH_sweep.json")
-        with open(path) as f:           # smoke contract: JSON must exist
-            json.load(f)
-        print(f"_meta/bench_json,{path},valid")
+        try:
+            with open(path) as f:       # smoke contract: JSON must exist
+                json.load(f)
+            json_note = f"_meta/bench_json,{path},valid"
+        except (OSError, json.JSONDecodeError) as e:
+            status["bench_json"] = (False, 0.0, f"{type(e).__name__}: {e}")
+    # per-benchmark pass/fail summary — CI's log tail says exactly what
+    # broke instead of silently archiving a partial BENCH_sweep.json
+    print("== benchmark summary ==", file=sys.stderr)
+    for name, (ok, secs, err) in status.items():
+        line = (f"  {name:<10} {'PASS' if ok else 'FAIL':<4} {secs:6.1f}s"
+                + (f"  {err}" if err else ""))
+        print(line, file=sys.stderr)
+    failed = [n for n, (ok, _, _) in status.items() if not ok]
+    if failed:
+        raise SystemExit(f"{len(failed)}/{len(status)} benchmark suites "
+                         f"failed: {', '.join(failed)}")
+    if json_note:
+        print(json_note)
 
 
 if __name__ == "__main__":

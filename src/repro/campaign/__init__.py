@@ -1,0 +1,40 @@
+"""Fault-tolerant sweep-campaign orchestration (docs/campaigns.md).
+
+``CampaignSpec`` expands (models x geometries x mixes x DRAM configs)
+into content-hashed points; ``run_campaign`` executes them with
+journaled manifests, resume, retry/timeout, and numeric guardrails;
+``FaultInjector`` injects deterministic crashes/hangs/NaNs/torn writes
+so tests can prove the whole thing actually survives them.
+"""
+from repro.campaign.executor import (
+    CampaignResult,
+    GuardrailViolation,
+    PointHooks,
+    PointTimeout,
+    RetryPolicy,
+    run_campaign,
+    run_point,
+    shard_points,
+    validate_result,
+)
+from repro.campaign.faults import (
+    Fault,
+    FaultInjector,
+    InjectedCrash,
+    plan_from_indices,
+)
+from repro.campaign.manifest import (
+    Journal,
+    JournalError,
+    atomic_write_json,
+    build_manifest,
+)
+from repro.campaign.spec import (
+    CampaignPoint,
+    CampaignSpec,
+    DRAMSpec,
+    GeometrySpec,
+    MixSpec,
+    ModelSpec,
+    example_spec,
+)

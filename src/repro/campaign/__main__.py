@@ -1,0 +1,3 @@
+from repro.campaign.cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,252 @@
+"""Declarative sweep-campaign specs with content-addressed points.
+
+A campaign is the cross product
+
+    models x LLC geometries x co-runner mixes x DRAM configs
+
+expanded into a *deterministic* list of ``CampaignPoint``s: same spec,
+same point list, same order, and every point carries a stable
+``point_id`` — a content hash of exactly the parameters that determine
+its result (never wall-clock, host names, or execution order).  The
+executor (``repro.campaign.executor``) journals completed points by id,
+so a resumed campaign can decide what is already done without trusting
+anything but the spec and the journal; a spec edit that changes any
+point's physics changes that point's id and forces a re-run.
+
+Specs round-trip through JSON (``CampaignSpec.to_dict``/``from_dict``)
+so campaign files can live in the repo and in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+from repro.core.cache import LLCConfig
+from repro.core.dram import DRAMConfig
+
+SPEC_VERSION = 1
+
+_WSS_CHOICES = ("l1", "llc", "dram")
+
+
+def canonical_json(obj) -> str:
+    """The one JSON encoding used for hashing and checksums: sorted
+    keys, no whitespace — byte-stable across processes and runs."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def content_hash(obj) -> str:
+    return hashlib.sha256(canonical_json(obj).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One DBB trace source.  ``window_bursts=None`` replays the whole
+    network trace; an integer clips an arbiter-interleaved window of
+    ``layer_index``'s streams (see ``repro.core.traces``)."""
+    name: str = "yolov3"
+    window_bursts: int | None = 4096
+    chunk_bursts: int = 16
+    layer_index: int = 40
+
+    def __post_init__(self):
+        if self.name != "yolov3":
+            raise ValueError(f"unknown model {self.name!r}; the campaign "
+                             "trace sources are: 'yolov3'")
+        if self.window_bursts is not None and self.window_bursts <= 0:
+            raise ValueError("window_bursts must be positive or None "
+                             f"(whole frame), got {self.window_bursts}")
+
+    def trace(self):
+        from repro.core import traces
+
+        if self.window_bursts is None:
+            return traces.network_trace()
+        return traces.default_dbb_window(max_bursts=self.window_bursts,
+                                         chunk_bursts=self.chunk_bursts,
+                                         layer_index=self.layer_index)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometrySpec:
+    """LLC geometry.  ``ways=None`` applies the Fig. 5 grid rule
+    (``repro.core.soc.llc_config_for``); an explicit ``ways`` pins the
+    associativity, which also lets campaigns build constant-``sets``
+    families where LRU inclusion makes hit counts provably monotone in
+    ways (the executor's cross-point guardrail)."""
+    size_kib: float
+    block: int = 64
+    ways: int | None = None
+
+    def __post_init__(self):
+        if self.size_kib <= 0 or self.block <= 0:
+            raise ValueError(f"geometry must be positive, got "
+                             f"size_kib={self.size_kib} block={self.block}")
+        if self.ways is not None and self.ways <= 0:
+            raise ValueError(f"ways must be positive, got {self.ways}")
+
+    def llc(self) -> LLCConfig:
+        if self.ways is None:
+            from repro.core.soc import llc_config_for
+
+            return llc_config_for(self.size_kib, self.block)
+        return LLCConfig(size_bytes=int(self.size_kib * 1024),
+                         ways=self.ways, block_bytes=self.block)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixSpec:
+    """Co-runner mix: ``corunners`` BwWrite streams with working-set
+    size class ``wss`` interleaved into the lane (Fig. 6 semantics)."""
+    corunners: int = 0
+    wss: str = "l1"
+
+    def __post_init__(self):
+        if self.corunners < 0:
+            raise ValueError(f"corunners must be >= 0, got {self.corunners}")
+        if self.wss not in _WSS_CHOICES:
+            raise ValueError(f"wss must be one of {_WSS_CHOICES}, "
+                             f"got {self.wss!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMSpec:
+    banks: int = 32
+    row_bytes: int = 2048
+    t_cas_cycles: int = 14
+    t_rcd_cycles: int = 14
+    t_rp_cycles: int = 14
+
+    def __post_init__(self):
+        if self.banks <= 0 or self.row_bytes <= 0:
+            raise ValueError(f"DRAM geometry must be positive, got "
+                             f"banks={self.banks} row_bytes={self.row_bytes}")
+
+    def dram(self) -> DRAMConfig:
+        return DRAMConfig(banks=self.banks, row_bytes=self.row_bytes,
+                          t_cas_cycles=self.t_cas_cycles,
+                          t_rcd_cycles=self.t_rcd_cycles,
+                          t_rp_cycles=self.t_rp_cycles)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignPoint:
+    """One (model, geometry, mix, dram) simulation.  ``point_id`` hashes
+    the physics-determining parameters plus ``SPEC_VERSION`` so result
+    records are self-describing and spec edits invalidate exactly the
+    points they change."""
+    model: ModelSpec
+    geometry: GeometrySpec
+    mix: MixSpec
+    dram: DRAMSpec
+
+    def params(self) -> dict:
+        return {"spec_version": SPEC_VERSION,
+                "model": self.model.to_dict(),
+                "geometry": self.geometry.to_dict(),
+                "mix": self.mix.to_dict(),
+                "dram": self.dram.to_dict()}
+
+    @property
+    def point_id(self) -> str:
+        return content_hash(self.params())
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    name: str
+    models: tuple[ModelSpec, ...] = (ModelSpec(),)
+    geometries: tuple[GeometrySpec, ...] = (GeometrySpec(2048),)
+    mixes: tuple[MixSpec, ...] = (MixSpec(),)
+    drams: tuple[DRAMSpec, ...] = (DRAMSpec(),)
+
+    def __post_init__(self):
+        if not (self.models and self.geometries and self.mixes
+                and self.drams):
+            raise ValueError("a campaign needs at least one model, "
+                             "geometry, mix, and DRAM config")
+        for d in self.drams:
+            for g in self.geometries:
+                if d.row_bytes % g.block:
+                    raise ValueError(
+                        f"DRAM row_bytes {d.row_bytes} is not a multiple "
+                        f"of LLC block {g.block}: the segment-native "
+                        "pipeline needs whole blocks per row (see "
+                        "socsim.simulate_dbb_segments)")
+
+    def expand(self) -> list[CampaignPoint]:
+        """The deterministic point list: models (outer) x drams x mixes
+        x geometries (inner), exactly the spec's declared order."""
+        return [CampaignPoint(m, g, x, d)
+                for m in self.models for d in self.drams
+                for x in self.mixes for g in self.geometries]
+
+    @property
+    def spec_hash(self) -> str:
+        return content_hash(self.to_dict())
+
+    def to_dict(self) -> dict:
+        return {"spec_version": SPEC_VERSION, "name": self.name,
+                "models": [m.to_dict() for m in self.models],
+                "geometries": [g.to_dict() for g in self.geometries],
+                "mixes": [x.to_dict() for x in self.mixes],
+                "drams": [d.to_dict() for d in self.drams]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CampaignSpec":
+        version = d.get("spec_version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(f"campaign spec version {version} is not "
+                             f"supported (this build speaks {SPEC_VERSION})")
+        return cls(
+            name=d["name"],
+            models=tuple(ModelSpec(**m) for m in d.get(
+                "models", [{}])) or (ModelSpec(),),
+            geometries=tuple(GeometrySpec(**g)
+                             for g in d["geometries"]),
+            mixes=tuple(MixSpec(**x) for x in d.get("mixes", [{}])),
+            drams=tuple(DRAMSpec(**x) for x in d.get("drams", [{}])))
+
+    @classmethod
+    def load(cls, path: str) -> "CampaignSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def example_spec(points: int = 8, *, window_bursts: int = 512,
+                 name: str = "example") -> CampaignSpec:
+    """A tiny but real campaign for smoke tests and CI: one windowed
+    YOLOv3 trace, a same-``sets`` geometry family (so the monotone-ways
+    guardrail is live), and solo + contended mixes, sized to exactly
+    ``points`` points."""
+    if not 0 < points <= 16:
+        raise ValueError(f"example spec supports 1..16 points, got {points}")
+    n_mixes = 2 if points % 2 == 0 and points >= 4 else 1
+    n_geoms = points // n_mixes
+    sets = 64
+    geoms = tuple(GeometrySpec(size_kib=sets * (1 << i) * 64 / 1024,
+                               block=64, ways=1 << i)
+                  for i in range(n_geoms))
+    mixes = (MixSpec(0, "l1"), MixSpec(2, "llc"))[:n_mixes]
+    return CampaignSpec(
+        name=name,
+        models=(ModelSpec(window_bursts=window_bursts),),
+        geometries=geoms, mixes=mixes)

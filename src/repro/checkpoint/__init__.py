@@ -1,4 +1,5 @@
 from repro.checkpoint.store import (  # noqa: F401
+    CheckpointCorruptError,
     CheckpointManager,
     latest_step,
     restore,

@@ -32,12 +32,45 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruptError(OSError):
+    """A checkpoint on disk cannot be trusted: torn commit, unreadable
+    or tampered manifest, missing leaf file, or a checksum mismatch.
+    Subclasses ``OSError`` so callers guarding restores with
+    ``except OSError`` keep working.  The message names the artifact
+    and the step so an operator can delete exactly the bad directory."""
+
+
 def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
+def _fsync_file(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """Flush directory metadata (renames, creates) to stable storage;
+    silently skipped where directories cannot be opened read-only."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(tree, directory: str, step: int) -> str:
-    """Synchronous atomic save. Returns the checkpoint path."""
+    """Synchronous atomic save: every file is written and fsync'd in a
+    temp directory, the COMMIT marker lands last, and the final rename
+    (plus parent-directory fsync) publishes the whole checkpoint — a
+    crash at any instant leaves either the old checkpoint or a torn
+    temp directory that ``latest_step``/``restore`` ignore.  Returns
+    the checkpoint path."""
     path = os.path.join(directory, f"step_{step:09d}")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -49,17 +82,23 @@ def save(tree, directory: str, step: int) -> str:
                 "leaves": []}
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        with open(os.path.join(tmp, f"leaf_{i:05d}.npy"), "wb") as f:
+            np.save(f, arr)
+            _fsync_file(f)
         manifest["leaves"].append({
             "index": i, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "crc32": _crc(arr)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        _fsync_file(f)
     with open(os.path.join(tmp, "COMMIT"), "w") as f:
         f.write("ok")
+        _fsync_file(f)
+    _fsync_dir(tmp)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)
+    _fsync_dir(directory)
     return path
 
 
@@ -88,22 +127,44 @@ def restore(tree_like, directory: str, step: int | None = None, *,
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise CheckpointCorruptError(
+            f"checkpoint {path} has no COMMIT marker — it is torn "
+            "(crashed mid-save); delete the directory or restore an "
+            "earlier step")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} manifest is unreadable ({e}); the "
+            "checkpoint cannot be validated — delete it or restore an "
+            "earlier step") from e
 
     leaves_like, treedef = jax.tree.flatten(tree_like)
-    if manifest["n_leaves"] != len(leaves_like):
+    if manifest.get("n_leaves") != len(leaves_like):
         raise ValueError(
-            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"checkpoint has {manifest.get('n_leaves')} leaves, "
             f"target tree has {len(leaves_like)}")
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(leaves_like))
 
     out = []
     for entry, shard in zip(manifest["leaves"], shard_leaves):
-        arr = np.load(os.path.join(path, f"leaf_{entry['index']:05d}.npy"))
+        leaf_path = os.path.join(path, f"leaf_{entry['index']:05d}.npy")
+        try:
+            arr = np.load(leaf_path)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"leaf file {leaf_path} is missing or undeserializable "
+                f"({e}) despite a committed manifest — the checkpoint "
+                "is corrupt; delete it or restore an earlier step") from e
         if _crc(arr) != entry["crc32"]:
-            raise IOError(f"crc mismatch for leaf {entry['index']} in {path}")
+            raise CheckpointCorruptError(
+                f"crc mismatch for leaf {entry['index']} in {path}: "
+                f"stored {entry['crc32']}, recomputed {_crc(arr)} — the "
+                "leaf bytes changed after commit; delete the checkpoint "
+                "or restore an earlier step")
         out.append(jax.device_put(arr, shard) if shard is not None
                    else jax.numpy.asarray(arr))
     return treedef.unflatten(out)

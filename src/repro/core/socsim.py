@@ -135,6 +135,50 @@ def simulate_dbb_stream(byte_addrs, llc_cfg: LLCConfig,
 # --------------------------------------------------------------------------
 # segment-native totals: no per-access replay at all
 # --------------------------------------------------------------------------
+class PipelineInvariantError(ValueError):
+    """A memory-pipeline result violates a closed-form invariant — the
+    numbers cannot have come from a correct simulation (a poisoned
+    worker, a corrupted record, an injected fault)."""
+
+
+def check_segment_totals(*, accesses: int, llc_hits: int,
+                         dram_row_hits: int, total_cycles: int,
+                         dram_cfg: DRAMConfig, t_llc_hit: int = 20) -> None:
+    """Validate a (accesses, hits, row hits, total) quadruple against
+    the closed-form latency identity of ``simulate_dbb_segments``:
+
+        total = T*t_llc_hit + misses*tCAS + row_misses*(tRP + tRCD)
+
+    plus the counting invariants 0 <= hits <= accesses and
+    0 <= row_hits <= misses.  Raises ``PipelineInvariantError`` with the
+    failing relation spelled out; used both on fresh results and when a
+    resumed campaign re-validates journaled records
+    (``repro.campaign.executor``)."""
+    vals = (accesses, llc_hits, dram_row_hits, total_cycles)
+    if not all(isinstance(v, int) for v in vals):
+        raise PipelineInvariantError(
+            f"pipeline counters must be ints, got {vals!r}")
+    if accesses < 0 or llc_hits < 0 or dram_row_hits < 0:
+        raise PipelineInvariantError(
+            f"negative pipeline counter: accesses={accesses} "
+            f"llc_hits={llc_hits} dram_row_hits={dram_row_hits}")
+    if llc_hits > accesses:
+        raise PipelineInvariantError(
+            f"llc_hits {llc_hits} exceeds accesses {accesses}")
+    misses = accesses - llc_hits
+    if dram_row_hits > misses:
+        raise PipelineInvariantError(
+            f"dram_row_hits {dram_row_hits} exceeds LLC misses {misses}")
+    expect = (accesses * t_llc_hit + misses * dram_cfg.t_cas_cycles
+              + (misses - dram_row_hits)
+              * (dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles))
+    if total_cycles != expect:
+        raise PipelineInvariantError(
+            f"total_cycles {total_cycles} != closed form {expect} "
+            f"(accesses={accesses} misses={misses} "
+            f"row_hits={dram_row_hits})")
+
+
 @dataclasses.dataclass
 class SegmentPipelineResult:
     total_cycles: int            # == simulate_dbb_stream(...).total_cycles
@@ -149,6 +193,17 @@ class SegmentPipelineResult:
     @property
     def mean_latency(self) -> float:
         return self.total_cycles / max(1, self.accesses)
+
+    def check_invariants(self, dram_cfg: DRAMConfig,
+                         t_llc_hit: int = 20) -> "SegmentPipelineResult":
+        """Raise ``PipelineInvariantError`` unless the counters satisfy
+        the closed-form identities; returns self for chaining."""
+        check_segment_totals(
+            accesses=self.accesses, llc_hits=self.llc_hits,
+            dram_row_hits=self.dram_row_hits,
+            total_cycles=self.total_cycles,
+            dram_cfg=dram_cfg, t_llc_hit=t_llc_hit)
+        return self
 
 
 def simulate_dbb_segments(segments, llc_cfg: LLCConfig,

@@ -218,12 +218,14 @@ def _check_lane_support(lanes, configs) -> None:
                 "into per-frame lane calls")
 
 
-def _lane_buckets(configs: list[LLCConfig], waste: int = 2) -> list[list[int]]:
+def lane_buckets(configs: list[LLCConfig], waste: int = 2) -> list[list[int]]:
     """Partition lane indices into buckets of comparable set counts so a
     2-set lane doesn't pay a 4096-set lane's padding: lanes sorted by
     descending sets, a new bucket whenever a lane has fewer than
     1/`waste` of its bucket's maximum.  A homogeneous grid stays one
-    bucket (one compiled program)."""
+    bucket (one compiled program).  Deterministic for a given config
+    list — the campaign executor (``repro.campaign``) also uses it to
+    shard sweep points into lane-shaped work units."""
     order = sorted(range(len(configs)), key=lambda i: -configs[i].sets)
     buckets: list[list[int]] = []
     bucket_max = None
@@ -260,7 +262,7 @@ def segment_lane_hit_counts(segments, configs: list[LLCConfig]
     _check_lane_support(lanes, configs)
     n_seg = max((len(t) for t in lanes), default=0)
     out = np.zeros((len(configs), max(1, n_seg)), np.int64)
-    for bucket in _lane_buckets(configs):
+    for bucket in lane_buckets(configs):
         cfgs_b = [configs[i] for i in bucket]
         sets, ways, blocks, max_sets, max_ways = _geometry_arrays(cfgs_b)
         engine = _lane_engine(max_sets, max_ways, max_ways, per_lane)
@@ -408,6 +410,62 @@ def corunner_segments(llc: LLCConfig, n: int, wss: str,
     return segs, np.asarray(labels)
 
 
+def interference_lane_metrics(llc: LLCConfig, dram, n: int, wss: str,
+                              nvdla_segs: list, chunk_bursts: int = 16,
+                              t_llc_hit: int = 20) -> dict:
+    """One interference lane, simulated exactly and reduced to the flat
+    metric record a campaign point journals (``repro.campaign``): the
+    co-runner-interleaved compressed trace goes once through the exact
+    segment LLC engine (per-segment hit attribution + exact miss runs),
+    the miss runs through the closed-form DRAM row model, and the
+    latency total through the same closed form as
+    ``socsim.simulate_dbb_segments`` — so every field is deterministic
+    and internally consistent (the executor's guardrails recompute the
+    total from the counts and reject any record where they disagree).
+
+    ``n=0`` (or ``wss="l1"``) is the solo-NVDLA lane.  All values are
+    plain ints/floats, JSON-stable for manifest journaling."""
+    from repro.core.cache import simulate_segments
+    from repro.core.dram import segment_row_hits
+
+    bb = llc.block_bytes
+    if dram.row_bytes % bb:
+        raise ValueError("row_bytes must be a multiple of block_bytes "
+                         "for the segment-native interference lane")
+    segs, nv = corunner_segments(llc, n, wss, nvdla_segs, chunk_bursts)
+    res = simulate_segments(segs, llc, per_segment=True,
+                            collect_miss_runs=True)
+    counts = np.asarray([s.count for s in segs], np.int64)
+    nv_acc = int(counts[nv].sum())
+    nv_hits = int(res.per_segment_hits[nv].sum())
+    runs = res.miss_runs
+    row = segment_row_hits([(b * bb, bb, c) for b, c, _ in runs], dram)
+    run_is_nv = (np.asarray([nv[i] for _, _, i in runs], bool)
+                 if runs else np.zeros(0, bool))
+    nv_miss = int(sum(c for (_, c, i) in runs if nv[i]))
+    nv_row_hits = int(row.per_segment[run_is_nv].sum())
+    misses = res.accesses - res.hits
+    row_misses = misses - row.row_hits
+    total = (res.accesses * t_llc_hit + misses * dram.t_cas_cycles
+             + row_misses * (dram.t_rp_cycles + dram.t_rcd_cycles))
+    return {
+        "segments": len(segs),
+        "accesses": int(res.accesses),
+        "llc_hits": int(res.hits),
+        "dram_row_hits": int(row.row_hits),
+        "t_llc_hit": int(t_llc_hit),
+        "total_cycles": int(total),
+        "hit_rate": res.hits / max(1, res.accesses),
+        "nvdla_accesses": nv_acc,
+        "nvdla_hits": nv_hits,
+        "nvdla_hit_rate": nv_hits / max(1, nv_acc),
+        "nvdla_misses": nv_miss,
+        "nvdla_miss_row_hits": nv_row_hits,
+        "nvdla_miss_row_hit_rate": (nv_row_hits / nv_miss
+                                    if nv_miss else 1.0),
+    }
+
+
 def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
                        window_bursts: int = 4096,
                        chunk_bursts: int = 16) -> dict:
@@ -425,8 +483,7 @@ def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
     masters mix in the banks, so co-runner misses break the NVDLA
     stream's row locality — the FR-FCFS disruption Fig. 6 attributes
     the "dram" slowdown to)."""
-    from repro.core.cache import simulate_segments
-    from repro.core.dram import DRAMConfig, segment_row_hits
+    from repro.core.dram import DRAMConfig
     from repro.core.soc import SoCConfig, interference_sweep as _closed_form
 
     soc = soc or SoCConfig()
@@ -442,10 +499,6 @@ def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
             "pass a window_bursts cap (the LLC sweep supports full "
             "frames — its lanes stay at stream granularity)")
     nvdla_segs = traces.default_dbb_window(max_bursts=window_bursts)
-    bb = llc.block_bytes
-    if dram.row_bytes % bb:
-        raise ValueError("row_bytes must be a multiple of block_bytes "
-                         "for the segment-native interference sweep")
     # l1-fitting co-runners never reach the shared fabric, so every
     # ('l1', n) lane is the solo-NVDLA trace — simulate it once and fan
     # the result out to all n below
@@ -453,25 +506,11 @@ def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
     out["sim_row_hit_rates"] = {}
     for wss, ns in (("l1", (0,)), ("llc", corunners), ("dram", corunners)):
         for n in ns:
-            segs, nv = corunner_segments(llc, n, wss, nvdla_segs,
-                                         chunk_bursts)
-            res = simulate_segments(segs, llc, per_segment=True,
-                                    collect_miss_runs=True)
-            counts = np.asarray([s.count for s in segs], np.int64)
-            hr = float(res.per_segment_hits[nv].sum() / counts[nv].sum())
-            # exact miss runs of the whole lane -> closed-form row
-            # model, attributed back to the NVDLA's misses
-            runs = res.miss_runs
-            row = segment_row_hits([(b * bb, bb, c) for b, c, _ in runs],
-                                   dram)
-            run_is_nv = (np.asarray([nv[i] for _, _, i in runs], bool)
-                         if runs else np.zeros(0, bool))
-            nv_miss = int(sum(c for (_, c, i) in runs if nv[i]))
-            rh = (float(row.per_segment[run_is_nv].sum() / nv_miss)
-                  if nv_miss else 1.0)
+            m = interference_lane_metrics(llc, dram, n, wss, nvdla_segs,
+                                          chunk_bursts)
             keys = ([(wss, n)] if wss != "l1"
-                    else [("l1", m) for m in corunners])
+                    else [("l1", k) for k in corunners])
             for key in keys:
-                out["sim_hit_rates"][key] = hr
-                out["sim_row_hit_rates"][key] = rh
+                out["sim_hit_rates"][key] = m["nvdla_hit_rate"]
+                out["sim_row_hit_rates"][key] = m["nvdla_miss_row_hit_rate"]
     return out

@@ -33,6 +33,12 @@ from repro.core.runtime import AccelOp, CommandStream, compile_network
 
 BURST_BYTES = 32       # NVDLA DBB minimum burst (paper sec. 4.1)
 
+# Physical DBB address width: NVDLA's DBB interface and the SoC DRAM
+# map are comfortably inside 40 bits (1 TiB).  Segment constructors
+# reject anything past it — an address that "works" only because numpy
+# int64 happens to hold it is a generator bug, not a bigger DRAM.
+DRAM_ADDR_BITS = 40
+
 # DBB address map: weights packed from 0, activations ping-pong in two
 # regions well above the weight heap (YOLOv3 needs ~62 MiB of weights
 # and < 16 MiB per feature map).  The regions are staggered by distinct
@@ -53,6 +59,35 @@ class Segment:
     stride: int
     count: int
     stream: str = ""           # "weight" | "ifmap" | "ofmap" (labelling)
+
+    def __post_init__(self):
+        if self.count < 0:
+            raise ValueError(
+                f"segment count must be >= 0, got {self.count} — a "
+                "negative burst count has no trace meaning; clip the "
+                "generator's arithmetic (traces.window drops empties)")
+        if self.stride < 0:
+            raise ValueError(
+                f"segment stride must be >= 0, got {self.stride} — "
+                "descending streams are not representable; emit the "
+                "ascending run and reorder at the consumer")
+        if self.count > 0:
+            if self.stride == 0:
+                raise ValueError(
+                    "segment stride must be positive for a non-empty "
+                    "segment — a repeated single address is not a "
+                    "compressible sequential burst stream")
+            if self.base < 0:
+                raise ValueError(
+                    f"segment base must be >= 0, got {self.base:#x} — "
+                    "byte addresses are physical DBB addresses")
+            last = self.base + (self.count - 1) * self.stride
+            if last >= 1 << DRAM_ADDR_BITS:
+                raise ValueError(
+                    f"segment end address {last:#x} exceeds the "
+                    f"{DRAM_ADDR_BITS}-bit DRAM address space "
+                    f"({1 << DRAM_ADDR_BITS:#x}) — rebase the trace or "
+                    "shrink count/stride; see traces.DRAM_ADDR_BITS")
 
     @property
     def bytes(self) -> int:

@@ -1,0 +1,266 @@
+"""Campaign orchestrator: spec hashing, journaling, resume, guardrails,
+and fault-injection equivalence (crash / hang / NaN / torn write)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from repro.campaign import (
+    CampaignSpec,
+    FaultInjector,
+    GeometrySpec,
+    InjectedCrash,
+    Journal,
+    JournalError,
+    MixSpec,
+    ModelSpec,
+    RetryPolicy,
+    example_spec,
+    plan_from_indices,
+    run_campaign,
+)
+from repro.campaign.manifest import record_crc
+
+
+def tiny_spec(points: int = 4) -> CampaignSpec:
+    return example_spec(points=points, window_bursts=256)
+
+
+def canon(manifest: dict) -> str:
+    return json.dumps(manifest, sort_keys=True)
+
+
+# --------------------------------------------------------------------------
+# spec expansion and content hashing
+# --------------------------------------------------------------------------
+def test_expand_is_deterministic():
+    spec = tiny_spec()
+    a = [p.point_id for p in spec.expand()]
+    b = [p.point_id for p in tiny_spec().expand()]
+    assert a == b
+    assert len(set(a)) == len(a)
+
+
+def test_point_id_tracks_physics():
+    g1, g2 = GeometrySpec(8, ways=2), GeometrySpec(16, ways=2)
+    m, x = ModelSpec(window_bursts=64), MixSpec()
+    from repro.campaign.spec import CampaignPoint, DRAMSpec
+
+    p1 = CampaignPoint(m, g1, x, DRAMSpec())
+    p2 = CampaignPoint(m, g2, x, DRAMSpec())
+    assert p1.point_id != p2.point_id
+    assert p1.point_id == CampaignPoint(m, g1, x, DRAMSpec()).point_id
+
+
+def test_spec_round_trips_json(tmp_path):
+    spec = tiny_spec()
+    path = str(tmp_path / "spec.json")
+    spec.save(path)
+    again = CampaignSpec.load(path)
+    assert again == spec
+    assert again.spec_hash == spec.spec_hash
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="wss"):
+        MixSpec(1, "l2")
+    with pytest.raises(ValueError, match="model"):
+        ModelSpec(name="resnet")
+    with pytest.raises(ValueError, match="row_bytes"):
+        CampaignSpec(name="bad", geometries=(GeometrySpec(8, block=96),))
+
+
+# --------------------------------------------------------------------------
+# clean run + resume
+# --------------------------------------------------------------------------
+def test_clean_run_writes_manifest(tmp_path):
+    spec = tiny_spec()
+    res = run_campaign(spec, str(tmp_path))
+    assert res.completed == 4 and not res.failed
+    m = json.load(open(res.manifest_path))
+    assert m["spec_hash"] == spec.spec_hash
+    assert [p["point_id"] for p in m["points"]] == \
+        [p.point_id for p in spec.expand()]
+    for p in m["points"]:
+        r = p["result"]
+        assert 0 <= r["llc_hits"] <= r["accesses"]
+        assert r["dram_row_hits"] <= r["accesses"] - r["llc_hits"]
+
+
+def test_resume_is_noop_after_success(tmp_path):
+    spec = tiny_spec()
+    first = run_campaign(spec, str(tmp_path))
+    second = run_campaign(spec, str(tmp_path), resume=True)
+    assert second.executed == 0 and second.resumed == 4
+    assert canon(first.manifest) == canon(second.manifest)
+
+
+def test_existing_journal_requires_resume_or_overwrite(tmp_path):
+    spec = tiny_spec()
+    run_campaign(spec, str(tmp_path))
+    with pytest.raises(JournalError, match="resume"):
+        run_campaign(spec, str(tmp_path))
+    res = run_campaign(spec, str(tmp_path), overwrite=True)
+    assert res.executed == 4
+
+
+def test_resume_refuses_other_campaign(tmp_path):
+    run_campaign(tiny_spec(), str(tmp_path))
+    other = example_spec(points=2, window_bursts=128)
+    with pytest.raises(JournalError, match="different campaign"):
+        run_campaign(other, str(tmp_path), resume=True)
+
+
+def test_torn_journal_tail_reruns_point(tmp_path):
+    spec = tiny_spec()
+    first = run_campaign(spec, str(tmp_path))
+    journal = os.path.join(str(tmp_path), "journal.jsonl")
+    lines = open(journal).read().splitlines(keepends=True)
+    # tear into the final point record (drop the trailing "done" record
+    # and half of the last point line) — the classic crash-mid-append
+    with open(journal, "w") as f:
+        f.writelines(lines[:-2])
+        f.write(lines[-2][: len(lines[-2]) // 2])
+    res = run_campaign(spec, str(tmp_path), resume=True)
+    assert res.dropped_records == 1
+    assert res.executed == 1 and res.resumed == 3
+    assert canon(first.manifest) == canon(res.manifest)
+
+
+def test_journal_crc_rejects_bitflips(tmp_path):
+    spec = tiny_spec()
+    run_campaign(spec, str(tmp_path))
+    journal = Journal(os.path.join(str(tmp_path), "journal.jsonl"))
+    records, dropped = journal.replay()
+    assert dropped == 0
+    # flip a digit inside a committed record's result
+    text = open(journal.path).read()
+    bad = text.replace('"accesses":256', '"accesses":999', 1)
+    assert bad != text
+    open(journal.path, "w").write(bad)
+    _, dropped = journal.replay()
+    assert dropped == 1
+
+
+def test_record_crc_excludes_itself():
+    rec = {"kind": "done", "completed": 1, "failed": 0}
+    crc = record_crc(rec)
+    assert record_crc({**rec, "crc": crc}) == crc
+
+
+# --------------------------------------------------------------------------
+# faults: retry, quarantine, equivalence
+# --------------------------------------------------------------------------
+def _run_until_done(spec, out_dir, plan, policy):
+    """Drive a faulted campaign the way an operator would: rerun with
+    --resume after every simulated process death."""
+    runs = 0
+    while True:
+        runs += 1
+        assert runs < 12, "campaign did not converge"
+        hooks = FaultInjector(plan, out_dir)
+        try:
+            return run_campaign(spec, out_dir, resume=runs > 1,
+                                policy=policy, hooks=hooks), runs
+        except InjectedCrash:
+            continue
+
+
+def test_fault_equivalence_all_kinds(tmp_path):
+    """A campaign surviving one crash, one hang, one NaN, and one torn
+    write ends bit-identical to an uninterrupted campaign."""
+    spec = tiny_spec()
+    clean = run_campaign(spec, str(tmp_path / "clean"))
+    plan = plan_from_indices(spec, [
+        {"point": 0, "kind": "nan"},
+        {"point": 1, "kind": "crash"},
+        {"point": 2, "kind": "hang", "hang_s": 0.8},
+        {"point": 3, "kind": "torn"},
+    ])
+    policy = RetryPolicy(max_retries=2, timeout_s=0.25, backoff_s=0.01)
+    res, runs = _run_until_done(spec, str(tmp_path / "faulted"),
+                                plan, policy)
+    assert runs >= 3            # crash and torn each cost one process
+    assert not res.failed
+    assert canon(res.manifest) == canon(clean.manifest)
+
+
+def test_nan_quarantined_without_retries(tmp_path):
+    spec = tiny_spec()
+    plan = plan_from_indices(spec, [{"point": 0, "kind": "nan"}])
+    res = run_campaign(spec, str(tmp_path),
+                       policy=RetryPolicy(max_retries=0, backoff_s=0),
+                       hooks=FaultInjector(plan, str(tmp_path)))
+    assert res.manifest["counts"] == {"total": 4, "completed": 3,
+                                      "failed": 1}
+    (info,) = res.failed.values()
+    assert "finite" in info["error"]
+    # resume keeps the quarantine; --retry-failed clears it
+    keep = run_campaign(spec, str(tmp_path), resume=True,
+                        hooks=FaultInjector(plan, str(tmp_path)))
+    assert keep.executed == 0 and keep.manifest["counts"]["failed"] == 1
+    heal = run_campaign(spec, str(tmp_path), resume=True, retry_failed=True,
+                        hooks=FaultInjector(plan, str(tmp_path)))
+    assert heal.completed == 4 and not heal.failed
+
+
+def test_monotone_ways_guardrail_catches_consistent_corruption(tmp_path):
+    # point 1 is the solo-mix ways=2 lane; deflating it is internally
+    # consistent, so only LRU inclusion vs the ways=1 sibling trips
+    spec = tiny_spec()
+    plan = plan_from_indices(spec, [{"point": 1, "kind": "corrupt"}])
+    res = run_campaign(spec, str(tmp_path),
+                       policy=RetryPolicy(max_retries=0, backoff_s=0),
+                       hooks=FaultInjector(plan, str(tmp_path)))
+    (info,) = res.failed.values()
+    assert "monotone" in info["error"]
+
+
+def test_hang_times_out_and_recovers(tmp_path):
+    spec = tiny_spec()
+    plan = plan_from_indices(spec, [{"point": 0, "kind": "hang",
+                                     "hang_s": 0.6}])
+    res = run_campaign(spec, str(tmp_path),
+                       policy=RetryPolicy(max_retries=1, timeout_s=0.15,
+                                          backoff_s=0.01),
+                       hooks=FaultInjector(plan, str(tmp_path)))
+    assert res.completed == 4 and not res.failed
+
+
+def test_fault_plan_validation():
+    spec = tiny_spec()
+    with pytest.raises(ValueError, match="outside"):
+        plan_from_indices(spec, [{"point": 99, "kind": "crash"}])
+    with pytest.raises(ValueError, match="kind"):
+        plan_from_indices(spec, [{"point": 0, "kind": "gremlin"}])
+
+
+# --------------------------------------------------------------------------
+# crash-resume property: random kill prefix == uninterrupted run
+# --------------------------------------------------------------------------
+def test_crash_resume_bit_identical_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    spec = example_spec(points=3, window_bursts=128)
+    with tempfile.TemporaryDirectory() as clean_dir:
+        clean = run_campaign(spec, clean_dir)
+        baseline = canon(clean.manifest)
+
+        @settings(max_examples=8, deadline=None)
+        @given(kill_at=st.integers(0, 2), second_kill=st.integers(0, 2))
+        def prop(kill_at, second_kill):
+            with tempfile.TemporaryDirectory() as d:
+                plan = plan_from_indices(spec, [
+                    {"point": kill_at, "kind": "crash"},
+                    {"point": second_kill, "kind": "torn"},
+                ])
+                res, _ = _run_until_done(spec, d, plan, RetryPolicy(
+                    max_retries=1, backoff_s=0))
+                assert not res.failed
+                assert canon(res.manifest) == baseline
+
+        prop()

@@ -46,6 +46,45 @@ def test_crc_detects_corruption(tmp_path):
         restore(t, str(tmp_path), 1)
 
 
+def test_corrupt_manifest_raises_checkpoint_error(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError
+
+    t = _tree()
+    path = save(t, str(tmp_path), 1)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write('{"treedef": "garb')        # torn mid-write
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        restore(t, str(tmp_path), 1)
+
+
+def test_missing_leaf_raises_checkpoint_error(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError
+
+    t = _tree()
+    path = save(t, str(tmp_path), 1)
+    os.remove(os.path.join(path, "leaf_00001.npy"))
+    with pytest.raises(CheckpointCorruptError, match="leaf"):
+        restore(t, str(tmp_path), 1)
+
+
+def test_explicit_restore_of_torn_step_raises(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError
+
+    t = _tree()
+    save(t, str(tmp_path), 1)
+    os.remove(os.path.join(tmp_path, "step_000000001", "COMMIT"))
+    with pytest.raises(CheckpointCorruptError, match="COMMIT"):
+        restore(t, str(tmp_path), 1)
+
+
+def test_corrupt_error_is_oserror(tmp_path):
+    """Existing callers guard restores with ``except OSError`` — the
+    typed error must stay inside that hierarchy."""
+    from repro.checkpoint import CheckpointCorruptError
+
+    assert issubclass(CheckpointCorruptError, OSError)
+
+
 def test_manager_gc_and_async(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
     t = _tree()

@@ -203,6 +203,37 @@ def test_zero_stride_rejected():
         simulate_segments([Segment(0, 0, 10)], CFG)
 
 
+def test_segment_constructor_validation():
+    with pytest.raises(ValueError, match="count"):
+        Segment(0, 32, -5)
+    with pytest.raises(ValueError, match="stride"):
+        Segment(0, -32, 10)
+    with pytest.raises(ValueError, match="base"):
+        Segment(-64, 32, 10)
+    # zero-count padding segments stay constructible with any base/stride
+    assert Segment(0, 32, 0).count == 0
+
+
+def test_segment_rejects_address_overflow():
+    from repro.core.traces import DRAM_ADDR_BITS
+
+    top = 1 << DRAM_ADDR_BITS
+    with pytest.raises(ValueError, match="address space"):
+        Segment(top, 32, 1)
+    with pytest.raises(ValueError, match="address space"):
+        Segment(top - 32, 64, 2)       # last access crosses the limit
+    # the highest representable burst is fine
+    assert Segment(top - 32, 32, 1).count == 1
+
+
+def test_tuple_segments_bypass_unchanged():
+    """Raw (base, stride, count) tuples are still accepted by the
+    engines (the hypothesis strategies build them) — constructor
+    validation applies to ``Segment`` objects only."""
+    res = simulate_segments([(0, 32, 64)], CFG)
+    assert res.accesses == 64
+
+
 def test_address_array_guards_overflow():
     small = as_address_array([0, 1 << 20])
     assert small.dtype in (jnp.int32, jnp.int64)
