@@ -27,14 +27,14 @@ def run(smoke: bool = False) -> list[tuple]:
     else:
         sw = sweep_llc(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
                        blocks=(32, 64, 128))
-    rows = [("fig5/no_llc_ms", round(sw["no_llc_s"] * 1e3, 2), "baseline")]
-    for (size, block), sp in sorted(sw["grid"].items()):
+    rows = [("fig5/no_llc_ms", round(sw.no_llc_s * 1e3, 2), "baseline")]
+    for (size, block), sp in sorted(sw.speedups.items()):
         paper = PAPER_ANCHORS.get((size, block))
         note = f"paper: {paper}" if paper else ""
         rows.append((f"fig5/llc_{size}KiB_{block}B", round(sp, 3), note))
-    for (size, block), hr in sorted(sw["sim_hit_rates"].items()):
+    for (size, block), hr in sorted(sw.sim_hit_rates.items()):
         rows.append((f"fig5/simhit_{size}KiB_{block}B", round(hr, 3),
-                     f"exact sim, {sw['window_bursts']}-burst window"))
+                     f"exact sim, {sw.window_bursts}-burst window"))
     if smoke:
         return rows
     rows.extend(_sim_driven_rows())

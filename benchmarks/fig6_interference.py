@@ -27,15 +27,15 @@ def run(smoke: bool = False) -> list[tuple]:
         sw = sweep_interference()
     rows = []
     for wss in ("l1", "llc", "dram"):
-        for n, v in sorted(sw[wss].items()):
+        for n, v in sorted(sw.slowdowns[wss].items()):
             paper = PAPER.get((wss, n))
             note = f"paper: {paper}" if paper else ""
             rows.append((f"fig6/{wss}_x{n}", round(v, 3), note))
-    for (wss, n), hr in sorted(sw["sim_row_hit_rates"].items()):
+    for (wss, n), hr in sorted(sw.sim_row_hit_rates.items()):
         rows.append((f"fig6/simrowhit_{wss}_x{n}", round(hr, 3),
                      "NVDLA DRAM row-hit rate, closed-form rows over "
                      "exact miss runs"))
-    for (wss, n), hr in sorted(sw["sim_hit_rates"].items()):
+    for (wss, n), hr in sorted(sw.sim_hit_rates.items()):
         rows.append((f"fig6/simllchit_{wss}_x{n}", round(hr, 3),
                      "NVDLA LLC hit rate, segment lanes"))
     if not smoke:
@@ -43,7 +43,7 @@ def run(smoke: bool = False) -> list[tuple]:
     return rows
 
 
-def _sim_driven_rows(sw: dict) -> list[tuple]:
+def _sim_driven_rows(sw) -> list[tuple]:
     """Slowdowns with the trace-measurable interference terms (LLC
     eviction, DRAM row-locality loss) taken from the simulated lanes."""
     from repro.core.accelerator import accel_time_s, op_stream_hit_rates
@@ -56,15 +56,15 @@ def _sim_driven_rows(sw: dict) -> list[tuple]:
     solo_rates = op_stream_hit_rates(stream, soc.mem)
     solo_s = accel_time_s(stream, soc.accel, soc.mem,
                           hit_rates=solo_rates)["seconds"]
-    h0 = sw["sim_hit_rates"][("l1", 0)]
-    rh0 = sw["sim_row_hit_rates"][("l1", 0)]
+    h0 = sw.sim_hit_rates[("l1", 0)]
+    rh0 = sw.sim_row_hit_rates[("l1", 0)]
     t_act = soc.mem.dram.t_rp_cycles + soc.mem.dram.t_rcd_cycles
     rows = []
     for wss in ("llc", "dram"):
-        for n in sorted(n for w, n in sw["sim_hit_rates"] if w == wss):
+        for n in sorted(n for w, n in sw.sim_hit_rates if w == wss):
             mem = with_corunners(soc.mem, n, wss)
-            evict = max(0.0, 1.0 - sw["sim_hit_rates"][(wss, n)] / h0)
-            extra = max(0.0, rh0 - sw["sim_row_hit_rates"][(wss, n)]) * t_act
+            evict = max(0.0, 1.0 - sw.sim_hit_rates[(wss, n)] / h0)
+            extra = max(0.0, rh0 - sw.sim_row_hit_rates[(wss, n)]) * t_act
             mem = dataclasses.replace(mem, llc_eviction_prob=evict,
                                       extra_dram_latency=extra)
             t = accel_time_s(stream, soc.accel, mem,

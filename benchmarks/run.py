@@ -2,8 +2,8 @@
 
 Prints ``name,value,note`` CSV.  ``python -m benchmarks.run [--only fig5]``.
 ``--smoke`` runs every suite on tiny grids (CI's benchmark job: proves
-the drivers execute end to end and emits ``BENCH_sweep.json`` without
-burning minutes of runner time).
+the drivers execute end to end and emits ``BENCH_sweep.json`` and
+``BENCH_campaign.json`` without burning minutes of runner time).
 """
 from __future__ import annotations
 
@@ -13,8 +13,9 @@ import os
 import sys
 import time
 
-from benchmarks import fig4_platforms, fig5_llc, fig6_interference
-from benchmarks import kernel_bench, roofline, socsim_bench
+from benchmarks import campaign_bench, fig4_platforms, fig5_llc
+from benchmarks import fig6_interference, kernel_bench, roofline
+from benchmarks import socsim_bench
 
 SUITES = {
     "fig4": fig4_platforms.run,
@@ -23,6 +24,7 @@ SUITES = {
     "kernels": kernel_bench.run,
     "roofline": roofline.run,
     "socsim": socsim_bench.run,
+    "campaign": campaign_bench.run,
 }
 
 
@@ -46,15 +48,20 @@ def main() -> None:
                             f"{type(e).__name__}: {e}")
             print(f"{name}/ERROR,{type(e).__name__},{e}", file=sys.stderr)
         print(f"_meta/{name}_seconds,{time.time()-t0:.1f},")
-    json_note = ""
+    json_notes = []
     if args.smoke and not args.only:
-        path = os.environ.get("BENCH_SWEEP_JSON", "BENCH_sweep.json")
-        try:
-            with open(path) as f:       # smoke contract: JSON must exist
-                json.load(f)
-            json_note = f"_meta/bench_json,{path},valid"
-        except (OSError, json.JSONDecodeError) as e:
-            status["bench_json"] = (False, 0.0, f"{type(e).__name__}: {e}")
+        contracts = (
+            ("bench_json", "BENCH_SWEEP_JSON", "BENCH_sweep.json"),
+            ("campaign_json", "BENCH_CAMPAIGN_JSON", "BENCH_campaign.json"),
+        )
+        for key, env, default in contracts:
+            path = os.environ.get(env, default)
+            try:
+                with open(path) as f:   # smoke contract: JSON must exist
+                    json.load(f)
+                json_notes.append(f"_meta/{key},{path},valid")
+            except (OSError, json.JSONDecodeError) as e:
+                status[key] = (False, 0.0, f"{type(e).__name__}: {e}")
     # per-benchmark pass/fail summary — CI's log tail says exactly what
     # broke instead of silently archiving a partial BENCH_sweep.json
     print("== benchmark summary ==", file=sys.stderr)
@@ -66,8 +73,8 @@ def main() -> None:
     if failed:
         raise SystemExit(f"{len(failed)}/{len(status)} benchmark suites "
                          f"failed: {', '.join(failed)}")
-    if json_note:
-        print(json_note)
+    for note in json_notes:
+        print(note)
 
 
 if __name__ == "__main__":

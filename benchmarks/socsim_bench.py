@@ -24,6 +24,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -155,7 +156,9 @@ def _bench_sweep(rows: list, smoke: bool = False) -> None:
         return jax.block_until_ready(out)
 
     def batched():
-        return jax.block_until_ready(batched_hits(win, configs))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return jax.block_until_ready(batched_hits(win, configs))
 
     ref_w = seed_window()
     got_w = batched()
@@ -190,11 +193,15 @@ def _bench_segment_lanes(rows: list, smoke: bool = False) -> None:
     probe = traces.window(frame, probe_bursts)
     addrs = traces.expand(probe)
     lane_counts = segment_lane_hit_counts(probe, configs).sum(axis=1)
-    bit_counts = np.asarray(batched_hits(addrs, configs)).sum(axis=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        bit_counts = np.asarray(batched_hits(addrs, configs)).sum(axis=1)
     assert np.array_equal(lane_counts, bit_counts), "lane parity violation"
 
     def expanded_probe():
-        return jax.block_until_ready(batched_hits(addrs, configs))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return jax.block_until_ready(batched_hits(addrs, configs))
 
     t_probe = _wall(expanded_probe, iters=1)
     t_expanded = t_probe * (n_frame / len(addrs))    # linear in trace len
@@ -231,12 +238,12 @@ def _bench_segment_socsim(rows: list, smoke: bool = False) -> None:
 
     def pipeline():
         return jax.block_until_ready(
-            simulate_dbb_stream(addrs, llc).latencies)
+            simulate_dbb_stream(addrs, llc=llc).latencies)
 
     def seg_native():
-        return simulate_dbb_segments(segs, llc)
+        return simulate_dbb_segments(segs, llc=llc)
 
-    ref = simulate_dbb_stream(addrs, llc)
+    ref = simulate_dbb_stream(addrs, llc=llc)
     got = seg_native()
     assert int(ref.total_cycles) == got.total_cycles, "socsim parity"
     t_pipe = _wall(pipeline, iters=1)
@@ -256,18 +263,18 @@ def _bench_fame1(rows: list, smoke: bool = False) -> None:
 
     def seed():
         return jax.block_until_ready(
-            simulate_dbb_stream(addrs, llc, early_exit=False).latencies)
+            simulate_dbb_stream(addrs, llc=llc, early_exit=False).latencies)
 
     def fast():
         return jax.block_until_ready(
-            simulate_dbb_stream(addrs, llc, early_exit=True).latencies)
+            simulate_dbb_stream(addrs, llc=llc, early_exit=True).latencies)
 
     assert np.array_equal(np.asarray(seed()), np.asarray(fast()))
     t_seed = _wall(seed)
     t_fast = _wall(fast)
     t = len(addrs)
-    r_seed = simulate_dbb_stream(addrs, llc, early_exit=False)
-    r_fast = simulate_dbb_stream(addrs, llc, early_exit=True)
+    r_seed = simulate_dbb_stream(addrs, llc=llc, early_exit=False)
+    r_fast = simulate_dbb_stream(addrs, llc=llc, early_exit=True)
     rows.append(("socsim/fame1_seed_acc_per_s", round(t / t_seed),
                  f"{r_seed.host_cycles} host cycles"))
     rows.append(("socsim/fame1_early_exit_acc_per_s", round(t / t_fast),

@@ -2,9 +2,12 @@
 
 ``CampaignSpec`` expands (models x geometries x mixes x DRAM configs)
 into content-hashed points; ``run_campaign`` executes them with
-journaled manifests, resume, retry/timeout, and numeric guardrails;
-``FaultInjector`` injects deterministic crashes/hangs/NaNs/torn writes
-so tests can prove the whole thing actually survives them.
+journaled manifests, resume, retry/timeout, and numeric guardrails —
+sequentially, or as vmapped point batches sharded over a
+``jax.sharding`` mesh (``mesh=``/``batch_points=``); results are typed
+``LaneMetrics`` records; ``FaultInjector`` injects deterministic
+crashes/hangs/NaNs/torn writes so tests can prove the whole thing
+actually survives them.
 """
 from repro.campaign.executor import (
     CampaignResult,
@@ -12,6 +15,7 @@ from repro.campaign.executor import (
     PointHooks,
     PointTimeout,
     RetryPolicy,
+    run_batch,
     run_campaign,
     run_point,
     shard_points,
@@ -38,3 +42,4 @@ from repro.campaign.spec import (
     ModelSpec,
     example_spec,
 )
+from repro.core.sweep import LaneMetrics, MixConfig, SweepGrid

@@ -45,11 +45,22 @@ def _cmd_run(args) -> int:
     policy = RetryPolicy(max_retries=args.retries,
                          timeout_s=args.timeout,
                          backoff_s=args.backoff)
+    mesh = None
+    if args.mesh is not None:
+        import jax
+
+        from repro.launch.mesh import make_sweep_mesh
+        devices = (jax.devices() if args.mesh < 0
+                   else jax.devices()[:args.mesh])
+        mesh = make_sweep_mesh(devices)
+        print(f"sweep mesh: {len(mesh.devices.ravel())} device(s)",
+              file=sys.stderr)
     try:
         res = run_campaign(spec, args.out, resume=args.resume,
                            overwrite=args.overwrite, policy=policy,
                            hooks=hooks, retry_failed=args.retry_failed,
-                           progress=lambda m: print(m, file=sys.stderr))
+                           progress=lambda m: print(m, file=sys.stderr),
+                           mesh=mesh, batch_points=args.batch_points)
     except InjectedCrash as e:
         print(f"simulated process death: {e}", file=sys.stderr)
         return EXIT_INJECTED_CRASH
@@ -118,6 +129,15 @@ def build_parser() -> argparse.ArgumentParser:
                        help="base retry backoff in seconds")
     run_p.add_argument("--inject", default=None,
                        help="fault-plan JSON (see the 'faults' command)")
+    run_p.add_argument("--mesh", nargs="?", const=-1, default=None,
+                       type=int, metavar="N",
+                       help="shard point batches over a jax device mesh "
+                            "(all visible devices, or the first N; on a "
+                            "CPU host export XLA_FLAGS=--xla_force_host_"
+                            "platform_device_count=K first)")
+    run_p.add_argument("--batch-points", type=int, default=32,
+                       help="max points per batched lane program "
+                            "(1 = strictly sequential; default 32)")
     run_p.set_defaults(func=_cmd_run)
 
     ex_p = sub.add_parser("example", help="print a tiny example spec")

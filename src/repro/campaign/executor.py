@@ -10,6 +10,15 @@ garbage:
   per bucket, and their geometries are ordered by
   ``repro.core.sweep.lane_buckets`` so compiled lane programs are
   maximally reused;
+* **batching** — each bucket runs as ONE vmapped lane program
+  (``sweep.interference_lane_metrics_batch``), optionally sharded over
+  a ``jax.sharding`` mesh (``repro.launch.mesh.make_sweep_mesh``) so a
+  point batch spreads across devices like a FireSim run farm spreads
+  simulations across FPGAs.  Batch results are unstacked back into
+  per-point journal records — bit-identical to the sequential path —
+  and fault handling stays per-point: a point whose attempt fails
+  (injected fault, guardrail trip) is retried through the sequential
+  path, so quarantine granularity is unchanged;
 * **journaling** — every completed point is appended to the campaign's
   checksummed JSONL journal *before* the executor moves on (see
   ``repro.campaign.manifest``); a kill at any instant loses at most the
@@ -45,13 +54,12 @@ from repro.campaign.manifest import (
     build_manifest,
 )
 from repro.campaign.spec import CampaignPoint, CampaignSpec, canonical_json
-from repro.core.socsim import PipelineInvariantError, check_segment_totals
-
-# result fields every completed point must carry, with finite values
-_INT_FIELDS = ("segments", "accesses", "llc_hits", "dram_row_hits",
-               "t_llc_hit", "total_cycles", "nvdla_accesses",
-               "nvdla_hits", "nvdla_misses", "nvdla_miss_row_hits")
-_FLOAT_FIELDS = ("hit_rate", "nvdla_hit_rate", "nvdla_miss_row_hit_rate")
+from repro.core.socsim import (
+    PipelineInvariantError,
+    check_segment_totals,
+    check_segment_totals_batch,
+)
+from repro.core.sweep import LaneMetrics
 
 
 class GuardrailViolation(RuntimeError):
@@ -107,15 +115,35 @@ class CampaignResult:
         return self.manifest["counts"]["completed"]
 
 
-def run_point(point: CampaignPoint, nvdla_segs: list) -> dict:
+def run_point(point: CampaignPoint, nvdla_segs: list) -> LaneMetrics:
     """Execute one sweep point: the co-runner-interleaved lane through
-    the exact segment LLC engine + closed-form DRAM row model."""
+    the exact segment LLC engine + closed-form DRAM row model.  Returns
+    the typed ``LaneMetrics`` record."""
     from repro.core.sweep import interference_lane_metrics
 
     return interference_lane_metrics(
-        point.geometry.llc(), point.dram.dram(),
-        point.mix.corunners, point.mix.wss,
-        nvdla_segs, chunk_bursts=point.model.chunk_bursts)
+        nvdla_segs, llc=point.geometry.llc(), dram=point.dram.dram(),
+        mix=point.mix.mix(), chunk_bursts=point.model.chunk_bursts)
+
+
+def run_batch(points: list[CampaignPoint], nvdla_segs: list,
+              mesh=None) -> list[LaneMetrics]:
+    """Execute a batch of points sharing one trace as vmapped lane
+    programs, optionally sharded over ``mesh``.  Every returned
+    ``LaneMetrics`` is bit-identical to ``run_point`` for that point;
+    raises (e.g. unsupported stride) mean the caller should fall back
+    to the sequential path."""
+    from repro.core.sweep import interference_lane_metrics_batch
+
+    chunk_bursts = {p.model.chunk_bursts for p in points}
+    if len(chunk_bursts) != 1:
+        raise ValueError("batch mixes chunk_bursts values; shard first")
+    return interference_lane_metrics_batch(
+        nvdla_segs,
+        llcs=[p.geometry.llc() for p in points],
+        drams=[p.dram.dram() for p in points],
+        mixes=[p.mix.mix() for p in points],
+        chunk_bursts=chunk_bursts.pop(), mesh=mesh)
 
 
 def _monotone_family_key(point: CampaignPoint) -> tuple | None:
@@ -130,47 +158,50 @@ def _monotone_family_key(point: CampaignPoint) -> tuple | None:
             llc.sets, llc.block_bytes)
 
 
-def validate_result(point: CampaignPoint, result: dict,
+def validate_result(point: CampaignPoint, result: LaneMetrics,
                     families: dict) -> None:
-    """Numeric guardrails for one result record.  Raises
+    """Numeric guardrails for one typed ``LaneMetrics`` result.  Raises
     ``GuardrailViolation`` naming the failed invariant; checks run
-    *before* journaling, so a poisoned number never becomes durable."""
+    *before* journaling, so a poisoned number never becomes durable.
+    Field *types* are still checked — the fault injector (and a
+    corrupted journal) can smuggle NaN into a counter field that the
+    dataclass type hints merely promise is an int."""
     import math
 
-    for k in _INT_FIELDS:
-        v = result.get(k)
+    for k in LaneMetrics._INT_FIELDS:
+        v = getattr(result, k)
         if not isinstance(v, int) or isinstance(v, bool) or v < 0:
             raise GuardrailViolation(
                 f"{point.point_id}: field {k!r} must be a nonnegative "
                 f"int, got {v!r}")
-    for k in _FLOAT_FIELDS:
-        v = result.get(k)
+    for k in LaneMetrics._FLOAT_FIELDS:
+        v = getattr(result, k)
         if not isinstance(v, (int, float)) or not math.isfinite(v):
             raise GuardrailViolation(
                 f"{point.point_id}: field {k!r} must be finite, got {v!r}")
     try:
         check_segment_totals(
-            accesses=result["accesses"], llc_hits=result["llc_hits"],
-            dram_row_hits=result["dram_row_hits"],
-            total_cycles=result["total_cycles"],
-            dram_cfg=point.dram.dram(), t_llc_hit=result["t_llc_hit"])
+            accesses=result.accesses, llc_hits=result.llc_hits,
+            dram_row_hits=result.dram_row_hits,
+            total_cycles=result.total_cycles,
+            dram=point.dram.dram(), t_llc_hit=result.t_llc_hit)
     except PipelineInvariantError as e:
         raise GuardrailViolation(f"{point.point_id}: {e}") from e
-    if result["nvdla_hits"] > result["nvdla_accesses"]:
+    if result.nvdla_hits > result.nvdla_accesses:
         raise GuardrailViolation(
-            f"{point.point_id}: nvdla_hits {result['nvdla_hits']} exceeds "
-            f"nvdla_accesses {result['nvdla_accesses']}")
-    if result["nvdla_hits"] > result["llc_hits"]:
+            f"{point.point_id}: nvdla_hits {result.nvdla_hits} exceeds "
+            f"nvdla_accesses {result.nvdla_accesses}")
+    if result.nvdla_hits > result.llc_hits:
         raise GuardrailViolation(
-            f"{point.point_id}: nvdla_hits {result['nvdla_hits']} exceeds "
-            f"whole-lane llc_hits {result['llc_hits']} — NVDLA hits are a "
+            f"{point.point_id}: nvdla_hits {result.nvdla_hits} exceeds "
+            f"whole-lane llc_hits {result.llc_hits} — NVDLA hits are a "
             "subset of the lane's hits")
     key = _monotone_family_key(point)
     if key is None:
         return
     ways = point.geometry.llc().ways
+    hits = result.llc_hits
     for other_ways, (other_id, other_hits) in families.get(key, {}).items():
-        hits = result["llc_hits"]
         if ((other_ways <= ways and other_hits > hits)
                 or (other_ways >= ways and other_hits < hits)):
             raise GuardrailViolation(
@@ -180,25 +211,27 @@ def validate_result(point: CampaignPoint, result: dict,
                 "hit counts must be monotone in ways at fixed sets/block")
 
 
-def _record_family(point: CampaignPoint, result: dict,
+def _record_family(point: CampaignPoint, result: LaneMetrics,
                    families: dict) -> None:
     key = _monotone_family_key(point)
     if key is not None:
         families.setdefault(key, {})[point.geometry.llc().ways] = (
-            point.point_id, result["llc_hits"])
+            point.point_id, result.llc_hits)
 
 
 def shard_points(points: list[CampaignPoint]) -> list[list[CampaignPoint]]:
     """Deterministic lane-bucket sharding: group points sharing a trace
-    (model) and lane context (mix, dram), then order each group's
+    (model — mixes and DRAM configs are per-lane operands of the batch
+    kernel, so they ride along in one shard), then order each group's
     geometries with ``sweep.lane_buckets`` so similar set counts run
-    back to back and compiled lane programs get reused."""
+    back to back and compiled lane programs get reused.  Wide shards
+    matter on a mesh: every extra shard is another narrow per-device
+    scan whose fixed per-step cost is pure overhead."""
     from repro.core.sweep import lane_buckets
 
     groups: dict[str, list[CampaignPoint]] = {}
     for p in points:
-        key = "|".join((str(p.model.to_dict()), str(p.mix.to_dict()),
-                        str(p.dram.to_dict())))
+        key = str(p.model.to_dict())
         groups.setdefault(key, []).append(p)
     shards = []
     for group in groups.values():
@@ -209,11 +242,17 @@ def shard_points(points: list[CampaignPoint]) -> list[list[CampaignPoint]]:
 
 
 def _attempt(point: CampaignPoint, attempt: int, nvdla_segs: list,
-             hooks: PointHooks, policy: RetryPolicy) -> dict:
-    """One timed attempt at one point."""
+             hooks: PointHooks, policy: RetryPolicy,
+             compute=None) -> LaneMetrics:
+    """One timed attempt at one point.  ``compute`` overrides the
+    simulation callable — the batch scheduler passes a closure over the
+    point's precomputed batch result, so hooks (fault injection, hangs,
+    corruption) still wrap every attempt identically to the sequential
+    path."""
+    compute = compute or (lambda: run_point(point, nvdla_segs))
+
     def work():
-        return hooks.in_worker(point, attempt,
-                               lambda: run_point(point, nvdla_segs))
+        return hooks.in_worker(point, attempt, compute)
 
     if policy.timeout_s is None:
         return work()
@@ -257,8 +296,9 @@ def _load_journal_state(journal: Journal, spec: CampaignSpec,
                 dropped += 1
                 continue
             try:
-                validate_result(points_by_id[pid], rec["result"], {})
-            except (GuardrailViolation, KeyError, TypeError):
+                metrics = LaneMetrics.from_record(rec["result"])
+                validate_result(points_by_id[pid], metrics, {})
+            except (GuardrailViolation, KeyError, TypeError, ValueError):
                 dropped += 1
                 continue
             completed[pid] = rec["result"]
@@ -270,12 +310,38 @@ def _load_journal_state(journal: Journal, spec: CampaignSpec,
     return completed, failed, dropped
 
 
+def _batch_first_attempts(chunk: list[CampaignPoint], nvdla_segs: list,
+                          mesh, note) -> list[LaneMetrics] | None:
+    """Precompute attempt-0 results for a point chunk as one vmapped
+    (optionally mesh-sharded) lane program, pre-validated with the
+    batched closed-form check.  Returns None — sequential fallback for
+    the whole chunk — if the batch engine cannot run it (unsupported
+    stride, inconsistent batch); per-point failures are impossible
+    here because faults are injected downstream, in the per-point
+    attempt loop."""
+    try:
+        results = run_batch(chunk, nvdla_segs, mesh=mesh)
+        check_segment_totals_batch(
+            accesses=[r.accesses for r in results],
+            llc_hits=[r.llc_hits for r in results],
+            dram_row_hits=[r.dram_row_hits for r in results],
+            total_cycles=[r.total_cycles for r in results],
+            drams=[p.dram.dram() for p in chunk],
+            t_llc_hit=results[0].t_llc_hit if results else 20)
+        return results
+    except Exception as e:
+        note(f"batch of {len(chunk)} points fell back to sequential: "
+             f"{type(e).__name__}: {e}")
+        return None
+
+
 def run_campaign(spec: CampaignSpec, out_dir: str, *,
                  resume: bool = False, overwrite: bool = False,
                  policy: RetryPolicy | None = None,
                  hooks: PointHooks | None = None,
                  retry_failed: bool = False,
-                 progress=None) -> CampaignResult:
+                 progress=None, mesh=None,
+                 batch_points: int = 32) -> CampaignResult:
     """Run (or resume) a campaign into ``out_dir``.
 
     ``resume`` replays ``journal.jsonl`` and re-enqueues only
@@ -284,6 +350,14 @@ def run_campaign(spec: CampaignSpec, out_dir: str, *,
     previously quarantined points.  ``hooks`` is the fault-injection /
     instrumentation seam; ``progress`` is an optional callable fed
     one-line status strings.
+
+    ``batch_points`` caps how many points run as one vmapped lane
+    program (1 = strictly sequential); ``mesh`` (see
+    ``repro.launch.mesh.make_sweep_mesh``) shards each batch's lane
+    axis across devices.  Batched or not, journals and manifests are
+    bit-identical: batch results unstack into the same per-point
+    records, attempt-0 faults still fire per point, and any retry runs
+    through the sequential path.
 
     Raises nothing for point-level failures (they quarantine); journal
     mismatches and spec errors raise.  A ``BaseException`` escaping a
@@ -335,44 +409,60 @@ def run_campaign(spec: CampaignSpec, out_dir: str, *,
     # seed the cross-point guardrail history from resumed results
     families: dict = {}
     by_id = {p.point_id: p for p in points}
-    for pid, result in completed.items():
-        _record_family(by_id[pid], result, families)
+    for pid, record in completed.items():
+        _record_family(by_id[pid], LaneMetrics.from_record(record),
+                       families)
 
     executed = 0
+    step = max(1, batch_points)
     for shard in shard_points(pending):
         nvdla_segs = shard[0].model.trace()   # one trace per lane bucket
-        for point in shard:
-            pid = point.point_id
-            last_err: Exception | None = None
-            for attempt in range(policy.max_retries + 1):
-                if attempt:
-                    time.sleep(policy.backoff(attempt - 1))
-                hooks.before_point(point, attempt)
-                try:
-                    result = _attempt(point, attempt, nvdla_segs,
-                                      hooks, policy)
-                    validate_result(point, result, families)
-                except Exception as e:
-                    last_err = e
-                    note(f"point {pid} attempt {attempt} failed: "
-                         f"{type(e).__name__}: {e}")
-                    continue
-                journal.append({"kind": "point", "point_id": pid,
-                                "attempt": attempt, "result": result})
-                hooks.after_append(point, journal)
-                completed[pid] = result
-                _record_family(point, result, families)
-                executed += 1
-                last_err = None
-                break
-            if last_err is not None:
-                info = {"error": f"{type(last_err).__name__}: {last_err}",
-                        "attempts": policy.max_retries + 1}
-                journal.append({"kind": "failed", "point_id": pid, **info})
-                hooks.after_append(point, journal)
-                failed[pid] = info
-                note(f"point {pid} quarantined after "
-                     f"{info['attempts']} attempts")
+        for lo in range(0, len(shard), step):
+            chunk = shard[lo:lo + step]
+            batch = (None if len(chunk) < 2 and mesh is None
+                     else _batch_first_attempts(chunk, nvdla_segs,
+                                                mesh, note))
+            for idx, point in enumerate(chunk):
+                pid = point.point_id
+                last_err: Exception | None = None
+                for attempt in range(policy.max_retries + 1):
+                    if attempt:
+                        time.sleep(policy.backoff(attempt - 1))
+                    hooks.before_point(point, attempt)
+                    # attempt 0 reuses the batch result; every retry
+                    # recomputes sequentially so a bad batch lane can
+                    # never poison a point twice
+                    compute = ((lambda r=batch[idx]: r)
+                               if batch is not None and attempt == 0
+                               else None)
+                    try:
+                        result = _attempt(point, attempt, nvdla_segs,
+                                          hooks, policy, compute)
+                        validate_result(point, result, families)
+                    except Exception as e:
+                        last_err = e
+                        note(f"point {pid} attempt {attempt} failed: "
+                             f"{type(e).__name__}: {e}")
+                        continue
+                    journal.append({"kind": "point", "point_id": pid,
+                                    "attempt": attempt,
+                                    "result": result.to_record()})
+                    hooks.after_append(point, journal)
+                    completed[pid] = result.to_record()
+                    _record_family(point, result, families)
+                    executed += 1
+                    last_err = None
+                    break
+                if last_err is not None:
+                    info = {"error":
+                            f"{type(last_err).__name__}: {last_err}",
+                            "attempts": policy.max_retries + 1}
+                    journal.append({"kind": "failed", "point_id": pid,
+                                    **info})
+                    hooks.after_append(point, journal)
+                    failed[pid] = info
+                    note(f"point {pid} quarantined after "
+                         f"{info['attempts']} attempts")
 
     journal.append({"kind": "done",
                     "completed": len(completed), "failed": len(failed)})

@@ -84,25 +84,25 @@ def plan_from_indices(spec: CampaignSpec,
     return faults
 
 
-def _consistent_deflate(result: dict, dram_cfg) -> dict:
-    """Zero the hit counters but keep the closed-form latency identity
-    intact (every access a miss, every miss a row miss) — internally
-    consistent, globally wrong: only the cross-point monotonicity
-    guardrail can catch it."""
-    out = dict(result)
-    acc = out["accesses"]
-    out["llc_hits"] = 0
-    out["dram_row_hits"] = 0
-    out["hit_rate"] = 0.0
-    out["nvdla_hits"] = 0
-    out["nvdla_hit_rate"] = 0.0
-    out["nvdla_misses"] = out["nvdla_accesses"]
-    out["nvdla_miss_row_hits"] = 0
-    out["nvdla_miss_row_hit_rate"] = 0.0
-    out["total_cycles"] = (
-        acc * out["t_llc_hit"] + acc * dram_cfg.t_cas_cycles
-        + acc * (dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles))
-    return out
+def _consistent_deflate(result, dram_cfg):
+    """Zero the hit counters of a ``LaneMetrics`` but keep the
+    closed-form latency identity intact (every access a miss, every
+    miss a row miss) — internally consistent, globally wrong: only the
+    cross-point monotonicity guardrail can catch it."""
+    acc = result.accesses
+    return dataclasses.replace(
+        result,
+        llc_hits=0,
+        dram_row_hits=0,
+        hit_rate=0.0,
+        nvdla_hits=0,
+        nvdla_hit_rate=0.0,
+        nvdla_misses=result.nvdla_accesses,
+        nvdla_miss_row_hits=0,
+        nvdla_miss_row_hit_rate=0.0,
+        total_cycles=(acc * result.t_llc_hit + acc * dram_cfg.t_cas_cycles
+                      + acc * (dram_cfg.t_rp_cycles
+                               + dram_cfg.t_rcd_cycles)))
 
 
 class FaultInjector(PointHooks):
@@ -167,8 +167,8 @@ class FaultInjector(PointHooks):
         fault = self._due(point, attempt, ("nan",))
         if fault is not None:
             self._consume(fault)
-            result = dict(result)
-            result[fault.field] = math.nan
+            result = dataclasses.replace(result,
+                                         **{fault.field: math.nan})
         fault = self._due(point, attempt, ("corrupt",))
         if fault is not None:
             self._consume(fault)

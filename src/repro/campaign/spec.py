@@ -19,6 +19,7 @@ so campaign files can live in the repo and in CI.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
 
@@ -28,6 +29,17 @@ from repro.core.dram import DRAMConfig
 SPEC_VERSION = 1
 
 _WSS_CHOICES = ("l1", "llc", "dram")
+
+
+@functools.lru_cache(maxsize=8)
+def _model_trace(window_bursts, chunk_bursts, layer_index):
+    from repro.core import traces
+
+    if window_bursts is None:
+        return traces.network_trace()
+    return traces.default_dbb_window(max_bursts=window_bursts,
+                                     chunk_bursts=chunk_bursts,
+                                     layer_index=layer_index)
 
 
 def canonical_json(obj) -> str:
@@ -59,13 +71,11 @@ class ModelSpec:
                              f"(whole frame), got {self.window_bursts}")
 
     def trace(self):
-        from repro.core import traces
-
-        if self.window_bursts is None:
-            return traces.network_trace()
-        return traces.default_dbb_window(max_bursts=self.window_bursts,
-                                         chunk_bursts=self.chunk_bursts,
-                                         layer_index=self.layer_index)
+        # memoized: the window is a pure function of the (frozen) spec,
+        # and the executor asks for it once per lane shard — callers
+        # must treat the returned segment list as read-only
+        return _model_trace(self.window_bursts, self.chunk_bursts,
+                            self.layer_index)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -114,6 +124,13 @@ class MixSpec:
         if self.wss not in _WSS_CHOICES:
             raise ValueError(f"wss must be one of {_WSS_CHOICES}, "
                              f"got {self.wss!r}")
+
+    def mix(self):
+        """The core-engine ``repro.core.sweep.MixConfig`` this spec
+        describes (the same late-bound pattern as ``GeometrySpec.llc``)."""
+        from repro.core.sweep import MixConfig
+
+        return MixConfig(corunners=self.corunners, wss=self.wss)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -242,7 +242,7 @@ def accel_time_s(stream: CommandStream, acc: AccelConfig,
 
 def recalibrate_stream_conflict(sim_hit_rates: dict) -> dict:
     """Re-fit ``STREAM_CONFLICT_BLOCKS`` against a *simulated* Fig. 5
-    grid (``repro.core.sweep.sweep_llc()["sim_hit_rates"]``: {(size_kib,
+    grid (``repro.core.sweep.sweep_llc().sim_hit_rates``: {(size_kib,
     block): exact hit rate}).
 
     The closed form says h = (1 - 32/B) * n/(n + c) with n the cache's

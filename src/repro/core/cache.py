@@ -264,7 +264,8 @@ def _segment_closed_form(state, b_first, n_blocks, a_interior, a_last,
 # --------------------------------------------------------------------------
 def segment_lane_scan(bases, strides, counts, r_needed, cold,
                       sets, ways, block_bytes,
-                      *, max_sets: int, max_ways: int, r_pad: int):
+                      *, max_sets: int, max_ways: int, r_pad: int,
+                      collect: bool = False, suffix: str = "full"):
     """One sweep lane's exact segment replay with *runtime* geometry.
 
     ``bases/strides/counts`` are (S,) int32 segment streams (count == 0
@@ -304,6 +305,27 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
     standard geometry qualifies.  Returns per-segment hit counts (S,)
     int32; hit counts are bit-identical to expanding the trace and
     running the exact per-access scan at that geometry.
+
+    ``collect=True`` (static) additionally returns the round-scan miss
+    bits, (S, r_pad, max_sets) bool: entry (j, k, s) is True iff round k
+    of segment j missed in set s.  Together with the analytically-known
+    suffix (every block past the round-scanned prefix misses), the
+    caller can reconstruct each segment's exact missed-block runs — the
+    compressed currency of the DRAM row model — without per-access
+    expansion (``repro.core.sweep.interference_lane_metrics_batch``).
+
+    ``suffix`` (static) specializes the closed-form suffix from the
+    host plan:
+
+    * ``"full"`` — the general oldest-first rank insert, any suffix
+      depth;
+    * ``"one"`` — every (segment, lane) suffix leaves at most one block
+      per set (n_blocks - n_pre <= sets): the insert is a plain
+      oldest-way eviction, O(ways) per set instead of the O(ways^2)
+      rank computation, which otherwise dominates the whole scan;
+    * ``"none"`` — every segment retires entirely in the round scan
+      (no cold segments and n_blocks <= ways*sets everywhere, so
+      n_suf == 0): the suffix block is dropped from the program.
     """
     s_idx = jnp.arange(max_sets, dtype=jnp.int32)
     q_idx = jnp.arange(max_ways, dtype=jnp.int32)
@@ -324,7 +346,7 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
         off = jnp.where(set_mask, (s_idx - b_first) % sets, 0)
 
         def round_k(k, inner):
-            tags, ts, hits = inner
+            tags, ts, hits, miss_buf = inner
             i = off + jnp.int32(k) * sets  # block ordinal within segment
             v = set_mask & (i < n_pre) & live
             blocks = b_first + i
@@ -334,24 +356,36 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
             a = (j_hi - j_lo + 1).astype(jnp.int32)
             # one fused reduction picks the touched way: a matching tag
             # wins outright (key -1, unique per set), else the oldest
-            # real way (padded ways pinned to int32 max; first-index
-            # tie-breaks match the reference argmin/argmax exactly)
+            # real way (padded ways pinned to int32 max; the cumsum
+            # first-min mask reproduces argmin's first-index tie-break
+            # without a gather — XLA:CPU gathers cost ~100ns/element,
+            # elementwise ops ~1ns)
             key = jnp.where(tags == t[None, :], -1,
                             jnp.where(way_mask[:, None], ts, imax))
-            way = jnp.argmin(key, axis=0)
-            hit = jnp.take_along_axis(key, way[None, :], axis=0)[0] == -1
-            touched = (q_idx[:, None] == way[None, :]) & v[None, :]
+            kmin = jnp.min(key, axis=0)
+            hit = kmin == -1
+            is_min = key == kmin[None, :]
+            first_min = (jnp.cumsum(is_min, axis=0) == 1) & is_min
+            touched = first_min & v[None, :]
             tags = jnp.where(touched, t[None, :], tags)
             ts = jnp.where(touched,
                            (counter + j_hi[None, :] + 1).astype(jnp.int32),
                            ts)
             hits = hits + jnp.sum(jnp.where(v, a - 1 + hit, 0),
                                   dtype=jnp.int32)
-            return (tags, ts, hits)
+            if collect:
+                miss_buf = miss_buf.at[k].set(v & ~hit)
+            return (tags, ts, hits, miss_buf)
 
-        tags, ts, hits = jax.lax.fori_loop(
+        miss_init = jnp.zeros((r_pad, max_sets) if collect else (0, 0),
+                              jnp.bool_)
+        tags, ts, hits, miss_buf = jax.lax.fori_loop(
             0, jnp.minimum(rounds, r_pad), round_k,
-            (tags, ts, jnp.int32(0)))
+            (tags, ts, jnp.int32(0), miss_init))
+
+        if suffix == "none":
+            counter = counter + jnp.where(live, count, 0)
+            return (tags, ts, counter), (hits, miss_buf)
 
         # closed-form suffix: everything past the round-scanned prefix
         # (the whole segment when cold)
@@ -359,37 +393,59 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
         n_suf = jnp.maximum(n_blocks - n_pre, 0)
         has_suf = n_suf > 0
         off_suf = jnp.where(set_mask, (s_idx - sb_first) % sets, 0)
-        m_s = jnp.where(off_suf < n_suf,
-                        (n_suf - off_suf + sets - 1) // sets, 0)
         victim_ts = jnp.where(way_mask[:, None], ts, imax)
-        rho = jnp.argsort(victim_ts, axis=0, stable=True)   # oldest first
-        jstar = m_s[None, :] - ((m_s[None, :] - 1 - q_idx[:, None]) % ways)
-        valid_q = (way_mask[:, None] & (jstar >= 1) & set_mask[None, :]
-                   & live)
-        blk = sb_first + off_suf[None, :] + (jstar - 1) * sets
-        t_star = (blk // sets).astype(jnp.int32)
-        ts_star = counter + _last_access(blk, base, stride, count, bb) + 1
-        old_t = jnp.take_along_axis(tags, rho, axis=0)
-        old_ts = jnp.take_along_axis(ts, rho, axis=0)
-        tags = tags.at[rho, s_idx[None, :]].set(
-            jnp.where(valid_q, t_star, old_t))
-        ts = ts.at[rho, s_idx[None, :]].set(
-            jnp.where(valid_q, ts_star.astype(jnp.int32), old_ts))
+        if suffix == "one":
+            # at most one suffix block per set: it evicts the oldest
+            # way (min ts, first-index tie-break via the same cumsum
+            # first-min mask as the round scan)
+            ins = set_mask & live & (off_suf < n_suf)
+            vmin = jnp.min(victim_ts, axis=0)
+            is_old = victim_ts == vmin[None, :]
+            oldest = (jnp.cumsum(is_old, axis=0) == 1) & is_old
+            blk1 = sb_first + off_suf
+            t1 = (blk1 // sets).astype(jnp.int32)
+            ts1 = counter + _last_access(blk1, base, stride, count, bb) + 1
+            wr = oldest & ins[None, :]
+            tags = jnp.where(wr, t1[None, :], tags)
+            ts = jnp.where(wr, ts1[None, :].astype(jnp.int32), ts)
+        else:
+            m_s = jnp.where(off_suf < n_suf,
+                            (n_suf - off_suf + sets - 1) // sets, 0)
+            # each way's rank in oldest-first recency order (stable:
+            # ties break on way index) via an O(ways^2) comparison
+            # count — the scatter/argsort formulation this replaces
+            # dominated the whole scan on CPU (batched scatters
+            # serialize per element)
+            older = ((victim_ts[None, :, :] < victim_ts[:, None, :])
+                     | ((victim_ts[None, :, :] == victim_ts[:, None, :])
+                        & (q_idx[None, :, None] < q_idx[:, None, None])))
+            rank = jnp.sum(older, axis=1).astype(jnp.int32)
+            jstar = m_s[None, :] - ((m_s[None, :] - 1 - rank) % ways)
+            valid_q = (way_mask[:, None] & (jstar >= 1)
+                       & set_mask[None, :] & live)
+            blk = sb_first + off_suf[None, :] + (jstar - 1) * sets
+            t_star = (blk // sets).astype(jnp.int32)
+            ts_star = (counter
+                       + _last_access(blk, base, stride, count, bb) + 1)
+            tags = jnp.where(valid_q, t_star, tags)
+            ts = jnp.where(valid_q, ts_star.astype(jnp.int32), ts)
         # every suffix access beyond a block's first touch hits
         j_split = jnp.where(has_suf,
                             _first_access(sb_first, base, stride, bb),
                             count)
         hits = hits + jnp.where(has_suf, (count - j_split) - n_suf, 0)
         counter = counter + jnp.where(live, count, 0)
-        return (tags, ts, counter), hits
+        return (tags, ts, counter), (hits, miss_buf)
 
     init = (jnp.full((max_ways, max_sets), -1, jnp.int32),
             jnp.zeros((max_ways, max_sets), jnp.int32),
             jnp.int32(0))
-    _, per_seg_hits = jax.lax.scan(
+    _, (per_seg_hits, miss_bits) = jax.lax.scan(
         per_segment, init,
         (bases, strides, counts, r_needed,
          jnp.asarray(cold).astype(jnp.bool_)))
+    if collect:
+        return per_seg_hits, miss_bits
     return per_seg_hits
 
 

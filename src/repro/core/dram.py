@@ -96,6 +96,42 @@ def _bank_first_last_rows(r0: int, r1: int, banks: int):
     return first, last, visited
 
 
+def _row_hits_bulk(base: np.ndarray, stride: np.ndarray, count: np.ndarray,
+                   banks: int, rb: int, rows_state: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized carry chain for stride <= row_bytes segments: the
+    per-bank open-row state a segment observes is the ``last`` row of
+    the most recent earlier segment that visited the bank (exclusive
+    running maximum over visit indices), so the whole serial loop
+    collapses to O(segments * banks) numpy with no Python per segment.
+    Returns (per_segment row hits, final open rows) — bit-identical to
+    the scalar loop."""
+    n = base.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int64), rows_state[:banks].copy()
+    live = count > 0
+    r0 = base // rb
+    r1 = (base + np.maximum(count - 1, 0) * stride) // rb
+    b = np.arange(banks, dtype=np.int64)[None, :]
+    first = r0[:, None] + ((b - r0[:, None]) % banks)
+    last = r1[:, None] - ((r1[:, None] - b) % banks)
+    visited = (first <= r1[:, None]) & live[:, None]
+    idx = np.where(visited, np.arange(n, dtype=np.int64)[:, None], -1)
+    latest = np.maximum.accumulate(idx, axis=0)
+    prev = np.vstack([np.full((1, banks), -1, np.int64), latest[:-1]])
+    prev_last = np.where(
+        prev >= 0,
+        np.take_along_axis(last, np.maximum(prev, 0), axis=0),
+        rows_state[None, :banks])
+    carry = (visited & (prev_last == first)).sum(axis=1)
+    per_seg = np.where(live, count - (r1 - r0 + 1) + carry, 0)
+    final = np.where(
+        latest[-1] >= 0,
+        np.take_along_axis(last, np.maximum(latest[-1:], 0), axis=0)[0],
+        rows_state[:banks])
+    return per_seg.astype(np.int64), final.astype(np.int64)
+
+
 def segment_row_hits(segments, cfg: DRAMConfig,
                      open_rows: np.ndarray | None = None) -> RowHitResult:
     """Row-hit count of a compressed stride-run trace, closed form.
@@ -124,7 +160,27 @@ def segment_row_hits(segments, cfg: DRAMConfig,
     banks, rb = cfg.banks, cfg.row_bytes
     rows_state = (np.full(banks, -1, np.int64) if open_rows is None
                   else np.array(open_rows, np.int64, copy=True))
-    seg_list = [segment_tuple(s) for s in segments]
+    if isinstance(segments, tuple) and len(segments) == 3 \
+            and isinstance(segments[0], np.ndarray):
+        base_a, stride_a, count_a = (np.asarray(a, np.int64)
+                                     for a in segments)
+    else:
+        seg_list = [segment_tuple(s) for s in segments]
+        base_a = np.asarray([m[0] for m in seg_list], np.int64)
+        stride_a = np.asarray([m[1] for m in seg_list], np.int64)
+        count_a = np.asarray([m[2] for m in seg_list], np.int64)
+    live_a = count_a > 0
+    if np.any(live_a & (stride_a <= 0)):
+        bad = int(stride_a[live_a & (stride_a <= 0)][0])
+        raise ValueError(f"segment stride must be positive: {bad}")
+    if not np.any(live_a & (stride_a > rb)):
+        per_seg, rows_state = _row_hits_bulk(
+            base_a, stride_a, count_a, banks, rb, rows_state)
+        return RowHitResult(row_hits=int(per_seg.sum()),
+                            accesses=int(count_a[live_a].sum()),
+                            open_rows=rows_state, per_segment=per_seg)
+    seg_list = list(zip(base_a.tolist(), stride_a.tolist(),
+                        count_a.tolist()))
     per_seg = np.zeros(len(seg_list), np.int64)
     accesses = 0
     for i, (base, stride, count) in enumerate(seg_list):

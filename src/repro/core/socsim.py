@@ -107,21 +107,22 @@ def _mem_pipeline(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
                           dram_component(llc_cfg, dram_cfg)])
 
 
-def simulate_dbb_stream(byte_addrs, llc_cfg: LLCConfig,
-                        dram_cfg: DRAMConfig | None = None,
-                        host_stalls=None, *,
+def simulate_dbb_stream(byte_addrs, *, llc: LLCConfig,
+                        dram: DRAMConfig | None = None,
+                        host_stalls=None,
                         early_exit: bool = True) -> MemPipelineResult:
     """Replay a DBB burst-address trace through the LLC -> DRAM pipeline.
 
-    ``early_exit=False`` forces the seed's fixed-length host schedule
-    (used by benchmarks as the before/after baseline); results are
-    bit-identical either way.
+    Configs are keyword-only (``llc=``, ``dram=``) — the shared
+    convention across the sweep/pipeline APIs.  ``early_exit=False``
+    forces the seed's fixed-length host schedule (used by benchmarks as
+    the before/after baseline); results are bit-identical either way.
     """
     from repro.utils.env import x64_enabled
 
-    dram_cfg = dram_cfg or DRAMConfig()
+    dram = dram or DRAMConfig()
     addrs = as_address_array(byte_addrs, what="DBB byte address")
-    pipe = _mem_pipeline(llc_cfg, dram_cfg, x64_enabled())
+    pipe = _mem_pipeline(llc, dram, x64_enabled())
     _, lats, n = pipe.run(addrs, host_stalls=host_stalls,
                           max_host_cycles=(host_stalls.shape[0]
                                            if host_stalls is not None else None),
@@ -143,7 +144,7 @@ class PipelineInvariantError(ValueError):
 
 def check_segment_totals(*, accesses: int, llc_hits: int,
                          dram_row_hits: int, total_cycles: int,
-                         dram_cfg: DRAMConfig, t_llc_hit: int = 20) -> None:
+                         dram: DRAMConfig, t_llc_hit: int = 20) -> None:
     """Validate a (accesses, hits, row hits, total) quadruple against
     the closed-form latency identity of ``simulate_dbb_segments``:
 
@@ -169,14 +170,52 @@ def check_segment_totals(*, accesses: int, llc_hits: int,
     if dram_row_hits > misses:
         raise PipelineInvariantError(
             f"dram_row_hits {dram_row_hits} exceeds LLC misses {misses}")
-    expect = (accesses * t_llc_hit + misses * dram_cfg.t_cas_cycles
+    expect = (accesses * t_llc_hit + misses * dram.t_cas_cycles
               + (misses - dram_row_hits)
-              * (dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles))
+              * (dram.t_rp_cycles + dram.t_rcd_cycles))
     if total_cycles != expect:
         raise PipelineInvariantError(
             f"total_cycles {total_cycles} != closed form {expect} "
             f"(accesses={accesses} misses={misses} "
             f"row_hits={dram_row_hits})")
+
+
+def check_segment_totals_batch(*, accesses, llc_hits, dram_row_hits,
+                               total_cycles, drams,
+                               t_llc_hit: int = 20) -> None:
+    """Vectorized ``check_segment_totals`` over a point batch — the
+    executor's fast pre-validation of an unstacked mesh batch before
+    the per-point guardrails run.  All four counter arguments are
+    equal-length sequences of ints, ``drams`` the per-point DRAM
+    configs.  Raises ``PipelineInvariantError`` naming every failing
+    batch index (one bad point must not mask another — the caller
+    quarantines per point)."""
+    import numpy as np
+
+    acc = np.asarray(accesses, np.int64)
+    hits = np.asarray(llc_hits, np.int64)
+    row = np.asarray(dram_row_hits, np.int64)
+    tot = np.asarray(total_cycles, np.int64)
+    n = len(acc)
+    if not (len(hits) == len(row) == len(tot) == len(drams) == n):
+        raise PipelineInvariantError(
+            "batch counter sequences have mismatched lengths")
+    misses = acc - hits
+    t_cas = np.asarray([d.t_cas_cycles for d in drams], np.int64)
+    t_act = np.asarray([d.t_rp_cycles + d.t_rcd_cycles for d in drams],
+                       np.int64)
+    expect = acc * t_llc_hit + misses * t_cas + (misses - row) * t_act
+    bad = ((acc < 0) | (hits < 0) | (row < 0) | (hits > acc)
+           | (row > misses) | (tot != expect))
+    if bad.any():
+        idxs = np.nonzero(bad)[0]
+        details = ", ".join(
+            f"[{i}] accesses={acc[i]} llc_hits={hits[i]} "
+            f"row_hits={row[i]} total={tot[i]} expect={expect[i]}"
+            for i in idxs[:8])
+        raise PipelineInvariantError(
+            f"{idxs.size}/{n} batch points violate the pipeline "
+            f"invariants: {details}")
 
 
 @dataclasses.dataclass
@@ -194,7 +233,7 @@ class SegmentPipelineResult:
     def mean_latency(self) -> float:
         return self.total_cycles / max(1, self.accesses)
 
-    def check_invariants(self, dram_cfg: DRAMConfig,
+    def check_invariants(self, dram: DRAMConfig,
                          t_llc_hit: int = 20) -> "SegmentPipelineResult":
         """Raise ``PipelineInvariantError`` unless the counters satisfy
         the closed-form identities; returns self for chaining."""
@@ -202,12 +241,12 @@ class SegmentPipelineResult:
             accesses=self.accesses, llc_hits=self.llc_hits,
             dram_row_hits=self.dram_row_hits,
             total_cycles=self.total_cycles,
-            dram_cfg=dram_cfg, t_llc_hit=t_llc_hit)
+            dram=dram, t_llc_hit=t_llc_hit)
         return self
 
 
-def simulate_dbb_segments(segments, llc_cfg: LLCConfig,
-                          dram_cfg: DRAMConfig | None = None,
+def simulate_dbb_segments(segments, *, llc: LLCConfig,
+                          dram: DRAMConfig | None = None,
                           t_llc_hit: int = 20) -> SegmentPipelineResult:
     """Latency totals of the LLC -> DRAM pipeline over a *compressed*
     DBB trace, with no per-access replay on either side.
@@ -228,20 +267,20 @@ def simulate_dbb_segments(segments, llc_cfg: LLCConfig,
     from repro.core.cache import simulate_segments
     from repro.core.dram import segment_row_hits
 
-    dram_cfg = dram_cfg or DRAMConfig()
-    bb = llc_cfg.block_bytes
-    if dram_cfg.row_bytes % bb:
+    dram = dram or DRAMConfig()
+    bb = llc.block_bytes
+    if dram.row_bytes % bb:
         raise ValueError(
-            f"row_bytes {dram_cfg.row_bytes} not a multiple of block_bytes "
+            f"row_bytes {dram.row_bytes} not a multiple of block_bytes "
             f"{bb}: a block could straddle rows; use simulate_dbb_stream")
-    res = simulate_segments(segments, llc_cfg, collect_miss_runs=True)
+    res = simulate_segments(segments, llc, collect_miss_runs=True)
     row = segment_row_hits([(b * bb, bb, c) for b, c, _ in res.miss_runs],
-                           dram_cfg)
+                           dram)
     misses = res.accesses - res.hits
     row_misses = misses - row.row_hits
     total = (res.accesses * t_llc_hit
-             + misses * dram_cfg.t_cas_cycles
-             + row_misses * (dram_cfg.t_rp_cycles + dram_cfg.t_rcd_cycles))
+             + misses * dram.t_cas_cycles
+             + row_misses * (dram.t_rp_cycles + dram.t_rcd_cycles))
     return SegmentPipelineResult(total_cycles=int(total),
                                  accesses=res.accesses,
                                  llc_hits=res.hits,

@@ -22,29 +22,161 @@ each lane is bit-identical to the unbatched simulator at that geometry
 (tests/test_sweep.py).
 
 Public API:
-* ``batched_hit_rates``        — (configs,) hit rates of one byte trace;
-* ``batched_hits``             — the raw per-access hit bits per lane;
 * ``segment_lane_hit_counts``  — (configs, segments) compressed-trace
                                  hit counts, shared or per-lane traces;
 * ``segment_lane_hit_rates``   — the per-lane rates thereof;
+* ``MixConfig``           — a co-runner mix (count + working-set size);
+* ``LaneMetrics``         — frozen typed record of one interference
+                            lane (``to_record``/``from_record`` for
+                            JSON journaling);
+* ``SweepGrid``           — frozen typed result of the figure sweeps;
+* ``interference_lane_metrics``       — one lane -> ``LaneMetrics``;
+* ``interference_lane_metrics_batch`` — many lanes as vmapped lane
+                            programs, optionally sharded over a
+                            ``jax.sharding`` mesh (the campaign
+                            executor's data-parallel path);
 * ``sweep_llc``           — Fig. 5 grid: closed-form speedups + exact
                             segment-lane hit rates, windowed or full
                             frame;
 * ``sweep_interference``  — Fig. 6 grid: closed-form slowdowns + exact
                             segment-lane hit rates and closed-form DRAM
                             row-hit rates under BwWrite co-runners.
+
+The expanded-trace per-access lanes (``batched_hits`` /
+``batched_hits_per_trace``) are deprecated: they serialize on burst
+count and exist only as a parity oracle for the segment-lane engine.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import traces
-from repro.core.cache import LLCConfig
+from repro.core.cache import LLCConfig, _append_block_runs
 from repro.utils.env import as_address_array
+
+
+# --------------------------------------------------------------------------
+# typed sweep results
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MixConfig:
+    """A co-runner mix: how many BwWrite cores run beside the NVDLA and
+    how large their working sets are ("l1" never reaches the shared
+    fabric, "llc" occupies half the LLC, "dram" streams far past it —
+    the three Fig. 6 regimes)."""
+    corunners: int = 0
+    wss: str = "l1"
+
+    def __post_init__(self):
+        if self.wss not in ("l1", "llc", "dram"):
+            raise ValueError(f"unknown working-set size {self.wss!r} "
+                             "(expected 'l1', 'llc' or 'dram')")
+        if self.corunners < 0:
+            raise ValueError("corunners must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneMetrics:
+    """One interference lane's exact metric record — the typed currency
+    between the sweep engine and the campaign executor (guardrails
+    consume attributes, journals store ``to_record()`` dicts).
+
+    Every field is a plain int/float: deterministic, JSON-stable, and
+    internally consistent (``total_cycles`` satisfies the closed-form
+    latency identity the executor re-checks)."""
+    segments: int
+    accesses: int
+    llc_hits: int
+    dram_row_hits: int
+    t_llc_hit: int
+    total_cycles: int
+    hit_rate: float
+    nvdla_accesses: int
+    nvdla_hits: int
+    nvdla_hit_rate: float
+    nvdla_misses: int
+    nvdla_miss_row_hits: int
+    nvdla_miss_row_hit_rate: float
+
+    _INT_FIELDS = ("segments", "accesses", "llc_hits", "dram_row_hits",
+                   "t_llc_hit", "total_cycles", "nvdla_accesses",
+                   "nvdla_hits", "nvdla_misses", "nvdla_miss_row_hits")
+    _FLOAT_FIELDS = ("hit_rate", "nvdla_hit_rate",
+                     "nvdla_miss_row_hit_rate")
+
+    def to_record(self) -> dict:
+        """Flat JSON-stable dict, keys == field names (the journaled
+        point-record format of ``repro.campaign.manifest``)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_record(cls, record: dict) -> "LaneMetrics":
+        """Rebuild from a journaled dict.  Raises ``KeyError`` on a
+        missing field and ``TypeError``/``ValueError`` on a non-numeric
+        one — the executor's replay validation relies on that."""
+        kw = {f: int(record[f]) for f in cls._INT_FIELDS}
+        kw.update({f: float(record[f]) for f in cls._FLOAT_FIELDS})
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """Typed result of a figure sweep (``sweep_llc`` /
+    ``sweep_interference``): the closed-form curves plus the simulated
+    per-point rates, with tuple-keyed dicts instead of the old ad-hoc
+    string-keyed blob.  ``to_record()`` flattens tuple keys into JSON
+    rows ([*key, value]); ``from_record`` restores them exactly."""
+    kind: str                              # "llc" | "interference"
+    sim_hit_rates: dict                    # (size,block) | (wss,n) -> rate
+    window_bursts: int | None = None
+    no_llc_s: float | None = None          # Fig. 5 baseline runtime
+    speedups: dict | None = None           # (size_kib, block) -> speedup
+    slowdowns: dict | None = None          # wss -> {n: slowdown}
+    sim_row_hit_rates: dict | None = None  # (wss, n) -> DRAM row-hit rate
+
+    def to_record(self) -> dict:
+        rec: dict = {"kind": self.kind, "window_bursts": self.window_bursts,
+                     "sim_hit_rates": [[*k, v] for k, v
+                                       in self.sim_hit_rates.items()]}
+        if self.no_llc_s is not None:
+            rec["no_llc_s"] = self.no_llc_s
+        if self.speedups is not None:
+            rec["speedups"] = [[*k, v] for k, v in self.speedups.items()]
+        if self.slowdowns is not None:
+            rec["slowdowns"] = [[wss, n, v]
+                                for wss, curve in self.slowdowns.items()
+                                for n, v in curve.items()]
+        if self.sim_row_hit_rates is not None:
+            rec["sim_row_hit_rates"] = [[*k, v] for k, v
+                                        in self.sim_row_hit_rates.items()]
+        return rec
+
+    @classmethod
+    def from_record(cls, record: dict) -> "SweepGrid":
+        def keyed(rows):
+            return {tuple(r[:-1]): r[-1] for r in rows}
+
+        slowdowns = None
+        if "slowdowns" in record:
+            slowdowns = {}
+            for wss, n, v in record["slowdowns"]:
+                slowdowns.setdefault(wss, {})[n] = v
+        return cls(
+            kind=record["kind"],
+            window_bursts=record.get("window_bursts"),
+            no_llc_s=record.get("no_llc_s"),
+            sim_hit_rates=keyed(record["sim_hit_rates"]),
+            speedups=(keyed(record["speedups"])
+                      if "speedups" in record else None),
+            slowdowns=slowdowns,
+            sim_row_hit_rates=(keyed(record["sim_row_hit_rates"])
+                               if "sim_row_hit_rates" in record else None))
 
 
 @functools.partial(jax.jit, static_argnames=("max_sets", "max_ways"))
@@ -96,9 +228,26 @@ def _geometry_arrays(configs):
     return sets, ways, blocks, max_sets, max_ways
 
 
+_EXPANDED_TRACE_DEPRECATION = (
+    "the expanded-trace per-access lanes are deprecated: serial depth is "
+    "O(accesses) per lane.  Use the segment-lane API "
+    "(segment_lane_hit_counts / segment_lane_hit_rates / "
+    "interference_lane_metrics_batch) which replays the compressed trace "
+    "directly.")
+
+
 def batched_hits(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
     """(n_cfg, T) per-access hit bits — every lane bit-identical to the
-    unbatched ``simulate_trace`` at that geometry, one compile total."""
+    unbatched ``simulate_trace`` at that geometry, one compile total.
+
+    .. deprecated:: kept only as a parity oracle for the segment-lane
+       engine; use ``segment_lane_hit_counts``."""
+    warnings.warn(_EXPANDED_TRACE_DEPRECATION, DeprecationWarning,
+                  stacklevel=2)
+    return _batched_hits(byte_addrs, configs)
+
+
+def _batched_hits(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
     sets, ways, blocks, max_sets, max_ways = _geometry_arrays(configs)
     addrs = as_address_array(byte_addrs, what="DBB trace")
     sim = jax.vmap(
@@ -109,7 +258,9 @@ def batched_hits(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
 
 
 def batched_hit_rates(byte_addrs, configs: list[LLCConfig]) -> jax.Array:
-    return jnp.mean(batched_hits(byte_addrs, configs).astype(jnp.float32),
+    warnings.warn(_EXPANDED_TRACE_DEPRECATION, DeprecationWarning,
+                  stacklevel=2)
+    return jnp.mean(_batched_hits(byte_addrs, configs).astype(jnp.float32),
                     axis=1)
 
 
@@ -130,14 +281,16 @@ def segment_sweep_hit_rates(segments, configs: list[LLCConfig]
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=32)
 def _lane_engine(max_sets: int, max_ways: int, r_pad: int,
-                 per_lane_trace: bool):
+                 per_lane_trace: bool, collect: bool = False,
+                 suffix: str = "full"):
     from repro.core.cache import segment_lane_scan
 
     in_axes = ((0, 0, 0, 0, 0, 0, 0, 0) if per_lane_trace
                else (None, None, None, None, None, 0, 0, 0))
     return jax.jit(jax.vmap(
         functools.partial(segment_lane_scan, max_sets=max_sets,
-                          max_ways=max_ways, r_pad=r_pad),
+                          max_ways=max_ways, r_pad=r_pad, collect=collect,
+                          suffix=suffix),
         in_axes=in_axes))
 
 
@@ -216,6 +369,31 @@ def _check_lane_support(lanes, configs) -> None:
                 f"lane trace has {total} accesses — the lane engine's "
                 "global LRU timestamp is int32; split multi-frame sweeps "
                 "into per-frame lane calls")
+
+
+def _check_lane_support_meta(lanes_meta, configs) -> None:
+    """`_check_lane_support` over (bases, strides, counts) array lanes —
+    the same constraints, vectorized."""
+    int32_max = np.iinfo(np.int32).max
+    min_block = min(c.block_bytes for c in configs)
+    for base, stride, count in lanes_meta:
+        live = count > 0
+        bad = live & ((stride <= 0) | (stride > min_block))
+        if np.any(bad):
+            raise ValueError(
+                f"segment stride {int(stride[bad][0])} outside "
+                f"(0, {min_block}] — the segment-lane engine needs "
+                "stride <= block_bytes in every lane; use "
+                "segment_sweep_hit_rates for sparse-stride traces")
+        if np.any(live & (base + count * stride > int32_max)):
+            raise OverflowError(
+                "segment addresses exceed int32 — the lane engine "
+                "keeps metadata in 32-bit; rebase the trace")
+        if int(count[live].sum()) > int32_max:
+            raise OverflowError(
+                f"lane trace has {int(count[live].sum())} accesses — "
+                "the lane engine's global LRU timestamp is int32; split "
+                "multi-frame sweeps into per-frame lane calls")
 
 
 def lane_buckets(configs: list[LLCConfig], waste: int = 2) -> list[list[int]]:
@@ -309,8 +487,13 @@ def segment_lane_hit_rates(segments, configs: list[LLCConfig]
 
 def batched_hits_per_trace(byte_addrs_2d, configs: list[LLCConfig]
                            ) -> jax.Array:
-    """Like ``batched_hits`` but with one trace per lane (n_cfg, T) —
-    used by the interference sweep where co-runners change the trace."""
+    """Like ``batched_hits`` but with one trace per lane (n_cfg, T).
+
+    .. deprecated:: the interference sweep now feeds compressed
+       co-runner lanes to the segment engine
+       (``interference_lane_metrics_batch``)."""
+    warnings.warn(_EXPANDED_TRACE_DEPRECATION, DeprecationWarning,
+                  stacklevel=2)
     sets, ways, blocks, max_sets, max_ways = _geometry_arrays(configs)
     sim = jax.vmap(
         functools.partial(_simulate_padded,
@@ -334,11 +517,12 @@ def grid_configs(sizes_kib, blocks) -> dict[tuple, LLCConfig]:
 
 
 def sweep_llc(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
-              blocks=(32, 64, 128), soc=None,
-              window_bursts: int | None = 4096) -> dict:
-    """Fig. 5, batched: the closed-form timing grid (`grid`, `no_llc_s`)
-    plus exact simulated hit rates for every geometry (`sim_hit_rates`)
-    from a single vmapped segment-lane program.
+              blocks=(32, 64, 128), *, soc=None,
+              window_bursts: int | None = 4096) -> SweepGrid:
+    """Fig. 5, batched: the closed-form timing grid (``.speedups``,
+    ``.no_llc_s``) plus exact simulated hit rates for every geometry
+    (``.sim_hit_rates``) from a single vmapped segment-lane program,
+    as a typed ``SweepGrid``.
 
     ``window_bursts=None`` simulates the *entire* YOLOv3 frame (at
     stream granularity — the whole-network compressed trace); an integer
@@ -348,48 +532,39 @@ def sweep_llc(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
     from repro.core.soc import SoCConfig, llc_sweep as _closed_form
 
     soc = soc or SoCConfig()
-    out = _closed_form(sizes_kib=sizes_kib, blocks=blocks, soc=soc)
+    cf = _closed_form(sizes_kib=sizes_kib, blocks=blocks, soc=soc)
     cfgs = grid_configs(sizes_kib, blocks)
     if window_bursts is None:
         win = traces.network_trace()
     else:
         win = traces.default_dbb_window(max_bursts=window_bursts)
     rates = segment_lane_hit_rates(win, list(cfgs.values()))
-    out["sim_hit_rates"] = {key: float(r)
-                            for key, r in zip(cfgs, rates)}
-    out["window_bursts"] = traces.total_bursts(win)
-    return out
+    return SweepGrid(
+        kind="llc",
+        no_llc_s=cf["no_llc_s"],
+        speedups=cf["grid"],
+        sim_hit_rates={key: float(r) for key, r in zip(cfgs, rates)},
+        window_bursts=traces.total_bursts(win))
 
 
 # --------------------------------------------------------------------------
 # Fig. 6 — interference sweep
 # --------------------------------------------------------------------------
-def corunner_segments(llc: LLCConfig, n: int, wss: str,
-                      nvdla_segs: list, chunk_bursts: int = 16
+def corunner_segments(nvdla_segs: list, *, llc: LLCConfig,
+                      mix: MixConfig, chunk_bursts: int = 16
                       ) -> tuple[list, np.ndarray]:
     """One lane's interleaved trace, *compressed*: a `chunk_bursts`-burst
-    NVDLA chunk, then `chunk_bursts` 64 B write lines from each of `n`
-    BwWrite co-runners, round-robin — the DBB/front-bus arbiter at chunk
-    granularity.  Returns (segments, nvdla_label_mask); each co-runner's
-    stream stays a valid stride run (wraps in its working-set span split
-    at the wrap point).  Working sets: "llc" wraps inside half the LLC
-    (occupies it), "dram" streams far past it (sweeps it), "l1" never
-    reaches the shared fabric (no co-runner accesses)."""
-    if wss == "l1":
-        n = 0
+    NVDLA chunk, then `chunk_bursts` 64 B write lines from each of the
+    mix's `corunners` BwWrite cores, round-robin — the DBB/front-bus
+    arbiter at chunk granularity.  Returns (segments,
+    nvdla_label_mask); each co-runner's stream stays a valid stride run
+    (wraps in its working-set span split at the wrap point).  Working
+    sets: "llc" wraps inside half the LLC (occupies it), "dram" streams
+    far past it (sweeps it), "l1" never reaches the shared fabric (no
+    co-runner accesses)."""
+    n = 0 if mix.wss == "l1" else mix.corunners
     chunks = [c for s in nvdla_segs for c in s.split(chunk_bursts)]
-    spans_regions = []
-    for w in range(n):
-        if wss == "llc":
-            span = max(64, llc.size_bytes // 2)
-            region = 0x4000_0000 + w * 0x0100_0000
-        else:                                             # "dram"
-            span = llc.size_bytes * 8
-            region = 0x6000_0000 + w * 0x0800_0000
-        # stagger start banks (2 KiB row offsets) like the NVDLA regions
-        # in repro.core.traces — co-runners don't all start on bank 0
-        region += (5 + 7 * w) * 2048
-        spans_regions.append((span // 64, region))
+    spans_regions = _corunner_spans(llc, mix)
     cursors = [0] * n
     segs: list[traces.Segment] = []
     labels: list[bool] = []
@@ -410,84 +585,398 @@ def corunner_segments(llc: LLCConfig, n: int, wss: str,
     return segs, np.asarray(labels)
 
 
-def interference_lane_metrics(llc: LLCConfig, dram, n: int, wss: str,
-                              nvdla_segs: list, chunk_bursts: int = 16,
-                              t_llc_hit: int = 20) -> dict:
-    """One interference lane, simulated exactly and reduced to the flat
-    metric record a campaign point journals (``repro.campaign``): the
-    co-runner-interleaved compressed trace goes once through the exact
-    segment LLC engine (per-segment hit attribution + exact miss runs),
-    the miss runs through the closed-form DRAM row model, and the
-    latency total through the same closed form as
-    ``socsim.simulate_dbb_segments`` — so every field is deterministic
-    and internally consistent (the executor's guardrails recompute the
-    total from the counts and reject any record where they disagree).
+def _corunner_spans(llc: LLCConfig, mix: MixConfig) -> list[tuple[int, int]]:
+    """Each co-runner's (span_lines, region_base) — the one definition
+    ``corunner_segments`` and ``corunner_meta`` share."""
+    n = 0 if mix.wss == "l1" else mix.corunners
+    spans_regions = []
+    for w in range(n):
+        if mix.wss == "llc":
+            span = max(64, llc.size_bytes // 2)
+            region = 0x4000_0000 + w * 0x0100_0000
+        else:                                             # "dram"
+            span = llc.size_bytes * 8
+            region = 0x6000_0000 + w * 0x0800_0000
+        # stagger start banks (2 KiB row offsets) like the NVDLA regions
+        # in repro.core.traces — co-runners don't all start on bank 0
+        region += (5 + 7 * w) * 2048
+        spans_regions.append((span // 64, region))
+    return spans_regions
 
-    ``n=0`` (or ``wss="l1"``) is the solo-NVDLA lane.  All values are
-    plain ints/floats, JSON-stable for manifest journaling."""
-    from repro.core.cache import simulate_segments
+
+def nvdla_chunks(nvdla_segs: list, chunk_bursts: int = 16) -> tuple:
+    """The chunked NVDLA stream as ``(bases, strides, counts)`` int64
+    arrays — ``Segment.split(chunk_bursts)`` over the whole window,
+    array-native.  Depends only on the trace, not the lane's geometry
+    or mix, so batched callers compute it once per shard and pass it to
+    every ``corunner_meta`` call (``_chunks``)."""
+    cb, cs, cc = [], [], []
+    for s in nvdla_segs:
+        base, stride, count = _segment_tuple(s)
+        if count <= 0:
+            continue
+        n_ch = -(-count // chunk_bursts)
+        idx = np.arange(n_ch, dtype=np.int64)
+        cb.append(base + idx * (chunk_bursts * stride))
+        cs.append(np.full(n_ch, stride, np.int64))
+        cnt = np.full(n_ch, chunk_bursts, np.int64)
+        cnt[-1] = count - (n_ch - 1) * chunk_bursts
+        cc.append(cnt)
+    if not cb:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), z.copy()
+    return tuple(np.concatenate(a) for a in (cb, cs, cc))
+
+
+def corunner_meta(nvdla_segs: list, *, llc: LLCConfig, mix: MixConfig,
+                  chunk_bursts: int = 16, _chunks: tuple | None = None
+                  ) -> tuple:
+    """Array-native twin of ``corunner_segments``: the same interleaved
+    lane trace as ``(bases, strides, counts, nvdla_mask)`` int64/bool
+    numpy arrays — segment for segment identical to
+    ``[segment_tuple(s) for s in corunner_segments(...)[0]]`` — built
+    with no per-segment Python objects, so the batched lane path's
+    trace construction is O(numpy) instead of O(segments) interpreter
+    work.  ``_chunks`` takes a precomputed ``nvdla_chunks`` result
+    (lane-invariant, so batch callers share one).  Falls back to
+    materializing ``corunner_segments`` when a co-runner chunk wraps
+    its working set more than once (spans smaller than a chunk)."""
+    n, wss = mix.corunners, mix.wss
+    if wss == "l1":
+        n = 0
+    cb, cs, cc = (_chunks if _chunks is not None
+                  else nvdla_chunks(nvdla_segs, chunk_bursts))
+    if cb.shape[0] == 0:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), z.copy(), np.zeros(0, bool)
+    n_ch = cb.shape[0]
+    if n == 0:
+        return cb, cs, cc, np.ones(n_ch, bool)
+    pre = np.concatenate([[0], np.cumsum(cc)[:-1]])   # cursor before chunk
+    chunk_i = np.arange(n_ch, dtype=np.int64)
+    parts = [(cb, cs, cc, chunk_i, np.zeros(n_ch, np.int64), True)]
+    for w, (span_lines, region) in enumerate(_corunner_spans(llc, mix)):
+        start = pre % span_lines
+        take1 = np.minimum(cc, span_lines - start)
+        rest = cc - take1
+        if np.any(rest > span_lines):     # >2 wraps: rare tiny spans
+            segs, nv = corunner_segments(nvdla_segs, llc=llc, mix=mix,
+                                         chunk_bursts=chunk_bursts)
+            m = np.asarray([_segment_tuple(sg) for sg in segs],
+                           np.int64).reshape(-1, 3)
+            return m[:, 0], m[:, 1], m[:, 2], np.asarray(nv, bool)
+        s64 = np.full(n_ch, 64, np.int64)
+        parts.append((region + start * 64, s64, take1, chunk_i,
+                      np.full(n_ch, 1 + 2 * w, np.int64), False))
+        j2 = np.flatnonzero(rest > 0)
+        if j2.size:
+            parts.append((np.full(j2.size, region, np.int64),
+                          np.full(j2.size, 64, np.int64), rest[j2], j2,
+                          np.full(j2.size, 2 + 2 * w, np.int64), False))
+    bases = np.concatenate([p[0] for p in parts])
+    strides = np.concatenate([p[1] for p in parts])
+    counts = np.concatenate([p[2] for p in parts])
+    chunks = np.concatenate([p[3] for p in parts])
+    slots = np.concatenate([p[4] for p in parts])
+    nv = np.concatenate([np.full(p[0].shape[0], p[5], bool)
+                         for p in parts])
+    order = np.lexsort((slots, chunks))   # chunk-major, arbiter slots
+    return bases[order], strides[order], counts[order], nv[order]
+
+
+def _lane_metrics_from_runs(*, n_segments, accesses, hits, runs, bb, nv,
+                            dram, t_llc_hit, nv_acc, nv_hits) -> LaneMetrics:
+    """The shared lane reduction: exact LLC counts + miss runs
+    ((first_block, n_blocks, seg_idx) triples in access order, either a
+    list of tuples or a tuple of three aligned int64 arrays) ->
+    closed-form DRAM row hits -> closed-form latency total -> the typed
+    record.  Both the sequential and the batched path end here, so
+    their metrics are bit-identical by construction."""
     from repro.core.dram import segment_row_hits
 
-    bb = llc.block_bytes
-    if dram.row_bytes % bb:
+    if isinstance(runs, tuple):
+        fb, nbk, sidx = (np.asarray(a, np.int64) for a in runs)
+    else:
+        arr = np.asarray(runs, np.int64).reshape(-1, 3)
+        fb, nbk, sidx = arr[:, 0], arr[:, 1], arr[:, 2]
+    row = segment_row_hits((fb * bb, np.full(fb.shape[0], bb, np.int64),
+                            nbk), dram)
+    run_is_nv = np.asarray(nv, bool)[sidx]
+    nv_miss = int(nbk[run_is_nv].sum())
+    nv_row_hits = int(row.per_segment[run_is_nv].sum())
+    misses = accesses - hits
+    row_misses = misses - row.row_hits
+    total = (accesses * t_llc_hit + misses * dram.t_cas_cycles
+             + row_misses * (dram.t_rp_cycles + dram.t_rcd_cycles))
+    return LaneMetrics(
+        segments=n_segments,
+        accesses=int(accesses),
+        llc_hits=int(hits),
+        dram_row_hits=int(row.row_hits),
+        t_llc_hit=int(t_llc_hit),
+        total_cycles=int(total),
+        hit_rate=hits / max(1, accesses),
+        nvdla_accesses=nv_acc,
+        nvdla_hits=nv_hits,
+        nvdla_hit_rate=nv_hits / max(1, nv_acc),
+        nvdla_misses=nv_miss,
+        nvdla_miss_row_hits=nv_row_hits,
+        nvdla_miss_row_hit_rate=(nv_row_hits / nv_miss
+                                 if nv_miss else 1.0))
+
+
+def _check_row_block(llc: LLCConfig, dram) -> None:
+    if dram.row_bytes % llc.block_bytes:
         raise ValueError("row_bytes must be a multiple of block_bytes "
                          "for the segment-native interference lane")
-    segs, nv = corunner_segments(llc, n, wss, nvdla_segs, chunk_bursts)
+
+
+def interference_lane_metrics(nvdla_segs: list, *, llc: LLCConfig,
+                              dram, mix: MixConfig,
+                              chunk_bursts: int = 16,
+                              t_llc_hit: int = 20) -> LaneMetrics:
+    """One interference lane, simulated exactly and reduced to the typed
+    ``LaneMetrics`` record a campaign point journals
+    (``repro.campaign``): the co-runner-interleaved compressed trace
+    goes once through the exact segment LLC engine (per-segment hit
+    attribution + exact miss runs), the miss runs through the
+    closed-form DRAM row model, and the latency total through the same
+    closed form as ``socsim.simulate_dbb_segments`` — so every field is
+    deterministic and internally consistent (the executor's guardrails
+    recompute the total from the counts and reject any record where
+    they disagree).
+
+    ``mix.corunners=0`` (or ``mix.wss="l1"``) is the solo-NVDLA lane."""
+    from repro.core.cache import simulate_segments
+
+    bb = llc.block_bytes
+    _check_row_block(llc, dram)
+    segs, nv = corunner_segments(nvdla_segs, llc=llc, mix=mix,
+                                 chunk_bursts=chunk_bursts)
     res = simulate_segments(segs, llc, per_segment=True,
                             collect_miss_runs=True)
     counts = np.asarray([s.count for s in segs], np.int64)
-    nv_acc = int(counts[nv].sum())
-    nv_hits = int(res.per_segment_hits[nv].sum())
-    runs = res.miss_runs
-    row = segment_row_hits([(b * bb, bb, c) for b, c, _ in runs], dram)
-    run_is_nv = (np.asarray([nv[i] for _, _, i in runs], bool)
-                 if runs else np.zeros(0, bool))
-    nv_miss = int(sum(c for (_, c, i) in runs if nv[i]))
-    nv_row_hits = int(row.per_segment[run_is_nv].sum())
-    misses = res.accesses - res.hits
-    row_misses = misses - row.row_hits
-    total = (res.accesses * t_llc_hit + misses * dram.t_cas_cycles
-             + row_misses * (dram.t_rp_cycles + dram.t_rcd_cycles))
-    return {
-        "segments": len(segs),
-        "accesses": int(res.accesses),
-        "llc_hits": int(res.hits),
-        "dram_row_hits": int(row.row_hits),
-        "t_llc_hit": int(t_llc_hit),
-        "total_cycles": int(total),
-        "hit_rate": res.hits / max(1, res.accesses),
-        "nvdla_accesses": nv_acc,
-        "nvdla_hits": nv_hits,
-        "nvdla_hit_rate": nv_hits / max(1, nv_acc),
-        "nvdla_misses": nv_miss,
-        "nvdla_miss_row_hits": nv_row_hits,
-        "nvdla_miss_row_hit_rate": (nv_row_hits / nv_miss
-                                    if nv_miss else 1.0),
-    }
+    return _lane_metrics_from_runs(
+        n_segments=len(segs), accesses=int(res.accesses),
+        hits=int(res.hits), runs=res.miss_runs, bb=bb,
+        nv=nv, dram=dram, t_llc_hit=t_llc_hit,
+        nv_acc=int(counts[nv].sum()),
+        nv_hits=int(res.per_segment_hits[nv].sum()))
 
 
-def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
+def _lane_miss_runs(base, stride, count, llc: LLCConfig, cold: np.ndarray,
+                    miss_bits: np.ndarray) -> tuple:
+    """Reconstruct one lane's exact missed-block runs from the vmapped
+    kernel's round-scan miss bits plus the analytically-known suffix
+    (every block past the round-scanned prefix misses; a cold segment
+    is all suffix).  Runs come out in segment order with blocks
+    ascending within a segment — the same access order
+    ``simulate_segments(collect_miss_runs=True)`` emits, up to
+    adjacent-run splits *within* a segment, which the closed-form row
+    model is invariant to (identical expanded access sequence).
+
+    ``base/stride/count`` are the lane's (n_segments,) metadata arrays;
+    returns ``(first_blocks, n_blocks, seg_idx)`` int64 arrays, fully
+    vectorized — no per-segment interpreter work."""
+    bb, sets, ways = llc.block_bytes, llc.sets, llc.ways
+    n_seg = base.shape[0]
+    live = count > 0
+    b_first = base // bb
+    b_last = (base + np.maximum(count - 1, 0) * stride) // bb
+    nb = np.where(live, b_last - b_first + 1, 0)
+    n_pre = np.where(np.asarray(cold[:n_seg], bool), 0,
+                     np.minimum(nb, ways * sets))
+    sj, kj, cj = np.nonzero(miss_bits[:n_seg])
+    ordv = ((cj.astype(np.int64) - b_first[sj]) % sets
+            + kj.astype(np.int64) * sets)
+    order = np.lexsort((ordv, sj))
+    sj, ordv = sj[order].astype(np.int64), ordv[order]
+    first = np.ones(sj.shape[0], bool)
+    if sj.shape[0]:
+        first[1:] = (sj[1:] != sj[:-1]) | (ordv[1:] != ordv[:-1] + 1)
+    pos = np.flatnonzero(first)
+    run_seg = sj[pos]
+    run_ord = ordv[pos]
+    run_len = np.diff(np.append(pos, sj.shape[0]))
+    # the analytic suffix is one contiguous run [n_pre, nb) per segment,
+    # merged into the last round-scan run when it abuts it
+    suf_seg = np.flatnonzero(live & (nb > n_pre))
+    suf_len = (nb - n_pre)[suf_seg]
+    at = np.searchsorted(run_seg, suf_seg, side="right") - 1
+    has_pre = (at >= 0) & (run_seg[np.maximum(at, 0)] == suf_seg)
+    at_m = at[has_pre]
+    merge = np.zeros(suf_seg.shape[0], bool)
+    merge[has_pre] = (run_ord[at_m] + run_len[at_m]) == n_pre[suf_seg[has_pre]]
+    run_len[at[merge]] += suf_len[merge]
+    run_seg = np.concatenate([run_seg, suf_seg[~merge]])
+    run_ord = np.concatenate([run_ord, n_pre[suf_seg[~merge]]])
+    run_len = np.concatenate([run_len, suf_len[~merge]])
+    order = np.lexsort((run_ord, run_seg))
+    run_seg, run_ord, run_len = (a[order] for a in
+                                 (run_seg, run_ord, run_len))
+    return b_first[run_seg] + run_ord, run_len.astype(np.int64), run_seg
+
+
+def _mesh_shard_lanes(arrays, mesh):
+    """Pad the lane axis to a multiple of the mesh size with count-0
+    no-op lanes (geometry repeated so traced scalars stay in range) and
+    place every operand lane-sharded, so the jitted vmap runs one lane
+    shard per device (computation follows data)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    bases, strides, counts, r_needed, cold, sets, ways, blocks = (
+        np.asarray(a) for a in arrays)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    pad = (-bases.shape[0]) % n_dev
+
+    def rep(a):
+        return np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+
+    def zero(a):
+        return np.concatenate(
+            [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+
+    if pad:
+        bases, strides = rep(bases), rep(strides)
+        counts, r_needed, cold = zero(counts), zero(r_needed), zero(cold)
+        sets, ways, blocks = rep(sets), rep(ways), rep(blocks)
+    sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+    return [jax.device_put(a, sharding)
+            for a in (bases, strides, counts, r_needed, cold,
+                      sets, ways, blocks)]
+
+
+def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
+                                    mixes, chunk_bursts: int = 16,
+                                    t_llc_hit: int = 20,
+                                    mesh=None) -> list[LaneMetrics]:
+    """Many interference lanes as vmapped lane programs — the campaign
+    executor's data-parallel path (``repro.campaign.executor``).
+
+    ``llcs``/``drams``/``mixes`` are equal-length per-lane config
+    sequences; lanes are bucketed by set count (``lane_buckets``) so
+    padding waste stays bounded, and each bucket runs as ONE compiled
+    program: the geometry-traced segment kernel with miss-bit
+    collection (``segment_lane_scan(collect=True)``), vmapped over
+    lanes.  Per lane, the host reconstructs the exact missed-block runs
+    (``_lane_miss_runs``) and finishes with the same closed-form
+    DRAM/latency reduction as the sequential path, so every
+    ``LaneMetrics`` is bit-identical to
+    ``interference_lane_metrics`` for that lane — the executor
+    journals batch results interchangeably with sequential ones.
+
+    ``mesh`` (a 1-D ``jax.sharding.Mesh``, see
+    ``repro.launch.mesh.make_sweep_mesh``) shards the lane axis across
+    devices; ``mesh=None`` runs the same program on one device.
+
+    Raises ``ValueError`` if any lane's trace falls outside the segment
+    engine's support (stride > block_bytes) — callers fall back to the
+    sequential path, which expands such segments exactly."""
+    lanes_n = len(llcs)
+    if not (len(drams) == len(mixes) == lanes_n):
+        raise ValueError(
+            f"llcs/drams/mixes lengths disagree: {lanes_n}/"
+            f"{len(drams)}/{len(mixes)}")
+    if lanes_n == 0:
+        return []
+    chunks = nvdla_chunks(nvdla_segs, chunk_bursts)
+    lanes, nv_masks = [], []
+    for llc, dram, mix in zip(llcs, drams, mixes):
+        _check_row_block(llc, dram)
+        b, s, c, nv = corunner_meta(nvdla_segs, llc=llc, mix=mix,
+                                    chunk_bursts=chunk_bursts,
+                                    _chunks=chunks)
+        lanes.append((b, s, c))
+        nv_masks.append(nv)
+    _check_lane_support_meta(lanes, llcs)
+    out: list[LaneMetrics | None] = [None] * lanes_n
+    for bucket in lane_buckets(llcs):
+        cfgs_b = [llcs[i] for i in bucket]
+        metas_b = [lanes[i] for i in bucket]
+        sets, ways, blocks, max_sets, max_ways = _geometry_arrays(cfgs_b)
+        s_pad = max(1, max(m[2].shape[0] for m in metas_b))
+        shape = (len(bucket), s_pad)
+        bases = np.zeros(shape, np.int32)
+        strides = np.ones(shape, np.int32)
+        counts = np.zeros(shape, np.int32)
+        r_needed = np.zeros(shape, np.int32)
+        suffix = "none"
+        for row, ((b, s, c), cfg) in enumerate(zip(metas_b, cfgs_b)):
+            k = c.shape[0]
+            bases[row, :k], strides[row, :k], counts[row, :k] = b, s, c
+            bb = cfg.block_bytes
+            last = b + np.maximum(c - 1, 0) * s
+            nb = np.where(c > 0, last // bb - b // bb + 1, 0)
+            # per-lane tight plan: enough rounds to retire the
+            # min(nb, ways*sets)-block prefix; no cold short-circuit
+            # (conservative cold=False is exact either way, and skipping
+            # the host-side interval tracker keeps the plan O(numpy))
+            r_needed[row, :k] = np.minimum(
+                cfg.ways, -(-nb // cfg.sets)).astype(np.int32)
+            overflow = nb - np.minimum(nb, cfg.ways * cfg.sets)
+            if np.any(overflow > cfg.sets):
+                suffix = "full"
+            elif suffix == "none" and np.any(overflow > 0):
+                suffix = "one"
+        cold = np.zeros(shape, bool)
+        # the static round-buffer depth only needs to cover this batch's
+        # actual plan, not max_ways — chunked interference traces need 1
+        r_pad = max(1, int(r_needed.max()))
+        arrays = [jnp.asarray(bases), jnp.asarray(strides),
+                  jnp.asarray(counts), jnp.asarray(r_needed),
+                  jnp.asarray(cold), sets, ways, blocks]
+        if mesh is not None:
+            arrays = _mesh_shard_lanes(arrays, mesh)
+        engine = _lane_engine(max_sets, max_ways, r_pad, True,
+                              collect=True, suffix=suffix)
+        hits_dev, miss_dev = engine(*arrays)
+        hits = np.asarray(hits_dev, np.int64)
+        miss_bits = np.asarray(miss_dev)
+        for row, i in enumerate(bucket):
+            b, s, c = lanes[i]
+            n_seg = c.shape[0]
+            lane_hits = int(hits[row, :n_seg].sum())
+            runs = _lane_miss_runs(b, s, c, llcs[i], cold[row],
+                                   miss_bits[row])
+            accesses = int(c.sum())
+            run_total = int(runs[1].sum())
+            if run_total != accesses - lane_hits:
+                raise RuntimeError(
+                    "lane miss-run reconstruction disagrees with the "
+                    f"kernel: {run_total} missed blocks vs "
+                    f"{accesses - lane_hits} misses (lane {i})")
+            nv = nv_masks[i]
+            out[i] = _lane_metrics_from_runs(
+                n_segments=n_seg, accesses=accesses, hits=lane_hits,
+                runs=runs, bb=llcs[i].block_bytes, nv=nv,
+                dram=drams[i], t_llc_hit=t_llc_hit,
+                nv_acc=int(c[nv].sum()),
+                nv_hits=int(hits[row, :n_seg][nv].sum()))
+    return out
+
+
+def sweep_interference(*, soc=None, corunners=(0, 1, 2, 3, 4),
                        window_bursts: int = 4096,
-                       chunk_bursts: int = 16) -> dict:
-    """Fig. 6, batched: closed-form slowdown curves (`l1`/`llc`/`dram`)
+                       chunk_bursts: int = 16) -> SweepGrid:
+    """Fig. 6, batched: closed-form slowdown curves (``.slowdowns``)
     plus, per (wss, n), the *simulated* NVDLA LLC hit rate with
     co-runner write streams physically interleaved into the trace
-    (`sim_hit_rates`) — every lane a compressed segment stream.  All
-    interference lanes share one LLC geometry, so each lane runs one
-    exact segment-engine pass that yields per-segment hit attribution
-    *and* the exact LLC-miss runs together (the vmapped
-    ``segment_lane_hit_counts`` engine is the multi-*geometry* path;
-    replaying here a second time just for lane-parallel hit bits would
-    double the simulation cost).  DRAM row-hit rates come from the
-    closed-form row model over each lane's miss runs (misses of *all*
-    masters mix in the banks, so co-runner misses break the NVDLA
-    stream's row locality — the FR-FCFS disruption Fig. 6 attributes
-    the "dram" slowdown to)."""
+    (``.sim_hit_rates``) — every lane a compressed segment stream,
+    returned as a typed ``SweepGrid``.  All interference lanes share
+    one LLC geometry, so each lane runs one exact segment-engine pass
+    that yields per-segment hit attribution *and* the exact LLC-miss
+    runs together (the vmapped ``segment_lane_hit_counts`` engine is
+    the multi-*geometry* path; replaying here a second time just for
+    lane-parallel hit bits would double the simulation cost).  DRAM
+    row-hit rates come from the closed-form row model over each lane's
+    miss runs (misses of *all* masters mix in the banks, so co-runner
+    misses break the NVDLA stream's row locality — the FR-FCFS
+    disruption Fig. 6 attributes the "dram" slowdown to)."""
     from repro.core.dram import DRAMConfig
     from repro.core.soc import SoCConfig, interference_sweep as _closed_form
 
     soc = soc or SoCConfig()
-    out = _closed_form(soc=soc, corunners=corunners)
+    cf = _closed_form(soc=soc, corunners=corunners)
     llc = soc.mem.llc or LLCConfig()
     dram = soc.mem.dram or DRAMConfig()
     if window_bursts is None:
@@ -502,15 +991,22 @@ def sweep_interference(soc=None, corunners=(0, 1, 2, 3, 4),
     # l1-fitting co-runners never reach the shared fabric, so every
     # ('l1', n) lane is the solo-NVDLA trace — simulate it once and fan
     # the result out to all n below
-    out["sim_hit_rates"] = {}
-    out["sim_row_hit_rates"] = {}
+    sim_hit_rates: dict = {}
+    sim_row_hit_rates: dict = {}
     for wss, ns in (("l1", (0,)), ("llc", corunners), ("dram", corunners)):
         for n in ns:
-            m = interference_lane_metrics(llc, dram, n, wss, nvdla_segs,
-                                          chunk_bursts)
+            m = interference_lane_metrics(
+                nvdla_segs, llc=llc, dram=dram,
+                mix=MixConfig(corunners=n, wss=wss),
+                chunk_bursts=chunk_bursts)
             keys = ([(wss, n)] if wss != "l1"
                     else [("l1", k) for k in corunners])
             for key in keys:
-                out["sim_hit_rates"][key] = m["nvdla_hit_rate"]
-                out["sim_row_hit_rates"][key] = m["nvdla_miss_row_hit_rate"]
-    return out
+                sim_hit_rates[key] = m.nvdla_hit_rate
+                sim_row_hit_rates[key] = m.nvdla_miss_row_hit_rate
+    return SweepGrid(
+        kind="interference",
+        slowdowns={wss: cf[wss] for wss in ("l1", "llc", "dram")},
+        sim_hit_rates=sim_hit_rates,
+        sim_row_hit_rates=sim_row_hit_rates,
+        window_bursts=window_bursts)

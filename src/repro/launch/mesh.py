@@ -39,6 +39,27 @@ def make_production_mesh(*, multi_pod: bool = False):
         np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_sweep_mesh(devices=None):
+    """1-D campaign-sweep mesh: every available device along a single
+    ``"points"`` axis.  The sweep engine
+    (``repro.core.sweep.interference_lane_metrics_batch``) shards its
+    lane axis over it, so each device simulates an equal slice of a
+    point batch — the run-farm analogue FireSim scales Fig. 5/6 with.
+
+    ``devices=None`` uses all of ``jax.devices()``.  On a CPU-only host
+    that is one device unless ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` was exported before the first jax import (how
+    tests and CI fan out to N lanes); a single-device mesh is valid —
+    it just runs the whole batch on that device."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if not devices:
+        raise RuntimeError(
+            "no jax devices visible — on a CPU host export "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "any jax import to fan the sweep mesh out to N lanes")
+    return jax.sharding.Mesh(np.asarray(devices), ("points",))
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over the real local devices (tests / examples)."""
     devices = jax.devices()

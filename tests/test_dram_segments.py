@@ -92,8 +92,8 @@ def test_yolov3_full_frame_exact():
 def _assert_pipeline_parity(segs, llc, dram=None):
     from repro.core.socsim import simulate_dbb_segments, simulate_dbb_stream
 
-    got = simulate_dbb_segments(segs, llc, dram)
-    ref = simulate_dbb_stream(traces.expand(segs), llc, dram)
+    got = simulate_dbb_segments(segs, llc=llc, dram=dram)
+    ref = simulate_dbb_stream(traces.expand(segs), llc=llc, dram=dram)
     assert got.total_cycles == int(ref.total_cycles)
     lats = np.asarray(ref.latencies)
     assert got.llc_hits == int((lats == 20).sum())
@@ -133,8 +133,8 @@ def test_pipeline_rejects_row_straddling_blocks():
 
     with pytest.raises(ValueError, match="row_bytes"):
         simulate_dbb_segments([Segment(0, 32, 64)],
-                              LLCConfig(size_bytes=4096, ways=4,
-                                        block_bytes=96))
+                              llc=LLCConfig(size_bytes=4096, ways=4,
+                                            block_bytes=96))
 
 
 def test_property_random_segment_lists():

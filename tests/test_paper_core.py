@@ -210,7 +210,7 @@ def test_recalibration_agrees_with_simulated_grid():
 
     sw = sweep_llc(sizes_kib=(0.5, 64, 1024), blocks=(32, 64, 128),
                    window_bursts=20_000)
-    cal = recalibrate_stream_conflict(sw["sim_hit_rates"])
+    cal = recalibrate_stream_conflict(sw.sim_hit_rates)
     assert cal["points"] == 9
     assert cal["rms_fit"] <= cal["rms_shipped"] + 1e-9
     assert cal["rms_shipped"] < 0.25, \

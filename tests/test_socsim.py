@@ -26,7 +26,7 @@ def _trace():
 
 def test_pipeline_hits_match_exact_cache_sim():
     addrs = _trace()
-    res = simulate_dbb_stream(addrs, LLC)
+    res = simulate_dbb_stream(addrs, llc=LLC)
     blocks = (addrs // LLC.block_bytes).astype(jnp.int32)
     hits = simulate_trace(blocks, sets=LLC.sets, ways=LLC.ways)
     # hit <=> latency == t_llc_hit (20)
@@ -37,7 +37,7 @@ def test_pipeline_hits_match_exact_cache_sim():
 def test_spatial_locality_latency():
     """Sequential 32 B bursts with 64 B blocks: alternating miss/hit."""
     addrs = sequential_burst_trace(32, 32, 1).astype(jnp.int64)
-    res = simulate_dbb_stream(addrs, LLC)
+    res = simulate_dbb_stream(addrs, llc=LLC)
     lats = np.asarray(res.latencies)
     assert (lats[1::2] == 20).all(), "second burst of each block must hit"
     assert (lats[0::2] > 20).all(), "first burst of each block must miss"
@@ -49,10 +49,10 @@ def test_fame1_stall_invariance_full_pipeline(seed):
     """The paper's property on the paper's own topology: per-access
     latencies and total cycles are identical under random host stalls."""
     addrs = _trace()
-    ref = simulate_dbb_stream(addrs, LLC)
+    ref = simulate_dbb_stream(addrs, llc=LLC)
     h = 6 * T
     stalls = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.35, (h, 2))
-    out = simulate_dbb_stream(addrs, LLC, host_stalls=stalls)
+    out = simulate_dbb_stream(addrs, llc=LLC, host_stalls=stalls)
     np.testing.assert_array_equal(np.asarray(ref.latencies),
                                   np.asarray(out.latencies))
     assert int(ref.total_cycles) == int(out.total_cycles)
@@ -63,7 +63,7 @@ def test_dram_row_locality_visible_through_pipeline():
     # all misses (tiny 1-block llc), sequential rows -> mostly row hits
     tiny = LLCConfig(size_bytes=64, ways=1, block_bytes=64)
     seq = (jnp.arange(T, dtype=jnp.int64) * 64)
-    res = simulate_dbb_stream(seq, tiny, dram)
+    res = simulate_dbb_stream(seq, llc=tiny, dram=dram)
     lats = np.asarray(res.latencies)
     miss_lats = lats[lats > 20]
     row_hit = 20 + dram.t_cas_cycles

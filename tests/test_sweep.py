@@ -13,22 +13,32 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import traces
 from repro.core.cache import LLCConfig, simulate_trace
 from repro.core.fame1 import Component, FAME1Pipeline
 from repro.core.socsim import simulate_dbb_stream
 from repro.core.sweep import (
+    LaneMetrics,
+    MixConfig,
+    SweepGrid,
     batched_hits,
     batched_hit_rates,
     corunner_segments,
     grid_configs,
+    interference_lane_metrics,
+    interference_lane_metrics_batch,
     segment_lane_hit_counts,
     segment_lane_hit_rates,
     segment_sweep_hit_rates,
     sweep_interference,
     sweep_llc,
 )
+
+# the expanded-trace lanes stay in service as parity oracles — their
+# deprecation warning is expected here (and asserted explicitly below)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 LLC = LLCConfig(size_bytes=4096, ways=4, block_bytes=64)
 
@@ -112,7 +122,8 @@ def test_segment_lanes_per_lane_traces():
     nv = traces.default_dbb_window(max_bursts=768)
     lanes, refs = [], []
     for n in (0, 2):
-        segs, _ = corunner_segments(llc, n, "dram", nv, chunk_bursts=16)
+        segs, _ = corunner_segments(nv, llc=llc, mix=MixConfig(n, "dram"),
+                                    chunk_bursts=16)
         lanes.append(segs)
         blocks = (traces.expand(segs) // llc.block_bytes).astype(np.int32)
         refs.append(int(np.asarray(simulate_trace(
@@ -131,8 +142,8 @@ def test_sweep_llc_full_trace_mode():
     """window_bursts=None runs the whole-network compressed trace."""
     sw = sweep_llc(sizes_kib=(8,), blocks=(64,), window_bursts=None)
     frame_bursts = traces.total_bursts(traces.network_trace())
-    assert sw["window_bursts"] == frame_bursts
-    (rate,) = sw["sim_hit_rates"].values()
+    assert sw.window_bursts == frame_bursts
+    (rate,) = sw.sim_hit_rates.values()
     assert 0.0 < rate < 1.0
 
 
@@ -142,21 +153,135 @@ def test_sweep_llc_keeps_closed_form_grid_and_adds_sim():
     sizes, blocks = (0.5, 1024), (32, 64)
     sw = sweep_llc(sizes_kib=sizes, blocks=blocks, window_bursts=512)
     ref = llc_sweep(sizes_kib=sizes, blocks=blocks)
-    assert sw["no_llc_s"] == ref["no_llc_s"]
-    assert sw["grid"] == ref["grid"]
-    assert set(sw["sim_hit_rates"]) == set(ref["grid"])
-    assert all(0.0 <= v <= 1.0 for v in sw["sim_hit_rates"].values())
+    assert sw.kind == "llc"
+    assert sw.no_llc_s == ref["no_llc_s"]
+    assert sw.speedups == ref["grid"]
+    assert set(sw.sim_hit_rates) == set(ref["grid"])
+    assert all(0.0 <= v <= 1.0 for v in sw.sim_hit_rates.values())
 
 
 def test_sweep_interference_keeps_closed_form_and_degrades_rows():
     sw = sweep_interference(corunners=(0, 4), window_bursts=1024)
-    assert all(abs(v - 1.0) < 1e-9 for v in sw["l1"].values())
-    assert sw["dram"][4] > sw["llc"][4] > 1.0
+    assert sw.kind == "interference"
+    assert all(abs(v - 1.0) < 1e-9 for v in sw.slowdowns["l1"].values())
+    assert sw.slowdowns["dram"][4] > sw.slowdowns["llc"][4] > 1.0
     # simulated DRAM row locality: untouched by L1-fitting co-runners,
     # degraded by DRAM-fitting ones
-    rh = sw["sim_row_hit_rates"]
+    rh = sw.sim_row_hit_rates
     assert rh[("l1", 4)] == rh[("l1", 0)]
     assert rh[("dram", 4)] < rh[("dram", 0)]
+
+
+# --------------------------------------------------------------------------
+# typed sweep-result API + batched lane programs
+# --------------------------------------------------------------------------
+def test_expanded_trace_lanes_emit_deprecation_warning():
+    addrs = _window(256)
+    configs = [LLC]
+    with pytest.warns(DeprecationWarning, match="expanded-trace"):
+        batched_hits(addrs, configs)
+    with pytest.warns(DeprecationWarning, match="expanded-trace"):
+        batched_hit_rates(addrs, configs)
+
+
+def test_lane_metrics_record_round_trip():
+    nv = traces.default_dbb_window(max_bursts=512)
+    from repro.core.dram import DRAMConfig
+
+    m = interference_lane_metrics(nv, llc=LLC, dram=DRAMConfig(),
+                                  mix=MixConfig(2, "llc"))
+    rec = m.to_record()
+    assert isinstance(rec, dict) and set(rec) == set(
+        LaneMetrics._INT_FIELDS) | set(LaneMetrics._FLOAT_FIELDS)
+    # json round-trip (what the campaign journal does) is lossless
+    import json
+
+    back = LaneMetrics.from_record(json.loads(json.dumps(rec)))
+    assert back == m
+    for f in LaneMetrics._INT_FIELDS:
+        assert isinstance(getattr(back, f), int), f
+    for f in LaneMetrics._FLOAT_FIELDS:
+        assert isinstance(getattr(back, f), float), f
+    with pytest.raises(KeyError):
+        LaneMetrics.from_record({k: v for k, v in rec.items()
+                                 if k != "accesses"})
+
+
+def test_sweep_grid_record_round_trip():
+    import json
+
+    sw = sweep_interference(corunners=(0, 2), window_bursts=256)
+    back = SweepGrid.from_record(json.loads(json.dumps(sw.to_record())))
+    assert back == sw
+    sw = sweep_llc(sizes_kib=(8,), blocks=(64,), window_bursts=256)
+    back = SweepGrid.from_record(json.loads(json.dumps(sw.to_record())))
+    assert back == sw
+
+
+def test_batched_lane_metrics_bit_identical_to_sequential():
+    """The tentpole parity requirement: one vmapped lane program over a
+    mixed bucket of geometries/mixes/DRAM specs returns *exactly* the
+    LaneMetrics the sequential engine computes, field for field."""
+    from repro.core.dram import DRAMConfig
+
+    nv = traces.default_dbb_window(max_bursts=512)
+    llcs, drams, mixes = [], [], []
+    for w in (1, 2, 4, 8):
+        for mix in (MixConfig(0, "l1"), MixConfig(2, "llc"),
+                    MixConfig(3, "dram")):
+            llcs.append(LLCConfig(64 * 64 * w, w, 64))
+            drams.append(DRAMConfig())
+            mixes.append(mix)
+    # a second bucket: different sets count + non-default DRAM timing
+    llcs.append(LLCConfig(128 * 64 * 2, 2, 64))
+    drams.append(DRAMConfig(banks=16, row_bytes=1024))
+    mixes.append(MixConfig(1, "llc"))
+    batch = interference_lane_metrics_batch(nv, llcs=llcs, drams=drams,
+                                            mixes=mixes)
+    for i, (llc, dram, mix) in enumerate(zip(llcs, drams, mixes)):
+        ref = interference_lane_metrics(nv, llc=llc, dram=dram, mix=mix)
+        assert batch[i] == ref, f"lane {i}: {llc} {mix}"
+
+
+def test_corunner_meta_matches_corunner_segments():
+    """The array-native trace builder must emit the same interleaved
+    lane, segment for segment, as the Segment-object builder — across
+    wss classes, co-runner counts, chunk sizes, and spans small enough
+    to hit the multi-wrap fallback."""
+    from repro.core.sweep import corunner_meta
+    from repro.core.traces import segment_tuple
+
+    nv = traces.default_dbb_window(max_bursts=256)
+    for size in (512, 2048, 65536):
+        for mix in (MixConfig(0, "l1"), MixConfig(1, "llc"),
+                    MixConfig(3, "llc"), MixConfig(2, "dram")):
+            for chunk in (4, 16, 33):
+                llc = LLCConfig(size, 2, 64)
+                segs, nv_ref = corunner_segments(nv, llc=llc, mix=mix,
+                                                 chunk_bursts=chunk)
+                ref = np.asarray([segment_tuple(s) for s in segs],
+                                 np.int64).reshape(-1, 3)
+                b, s, c, m = corunner_meta(nv, llc=llc, mix=mix,
+                                           chunk_bursts=chunk)
+                label = f"size={size} mix={mix} chunk={chunk}"
+                np.testing.assert_array_equal(b, ref[:, 0], err_msg=label)
+                np.testing.assert_array_equal(s, ref[:, 1], err_msg=label)
+                np.testing.assert_array_equal(c, ref[:, 2], err_msg=label)
+                np.testing.assert_array_equal(
+                    m, np.asarray(nv_ref, bool), err_msg=label)
+
+
+def test_batched_lane_metrics_empty_and_length_checks():
+    assert interference_lane_metrics_batch(
+        traces.default_dbb_window(max_bursts=64),
+        llcs=[], drams=[], mixes=[]) == []
+    from repro.core.dram import DRAMConfig
+
+    with pytest.raises(ValueError):
+        interference_lane_metrics_batch(
+            traces.default_dbb_window(max_bursts=64),
+            llcs=[LLC], drams=[DRAMConfig(), DRAMConfig()],
+            mixes=[MixConfig()])
 
 
 # --------------------------------------------------------------------------
@@ -217,8 +342,8 @@ def test_all_stall_cycles_are_compacted_away():
 
 def test_dbb_stream_early_exit_parity_and_host_cycles():
     addrs = traces.expand(traces.default_dbb_window(max_bursts=96))
-    ref = simulate_dbb_stream(addrs, LLC, early_exit=False)
-    fast = simulate_dbb_stream(addrs, LLC, early_exit=True)
+    ref = simulate_dbb_stream(addrs, llc=LLC, early_exit=False)
+    fast = simulate_dbb_stream(addrs, llc=LLC, early_exit=True)
     np.testing.assert_array_equal(np.asarray(ref.latencies),
                                   np.asarray(fast.latencies))
     assert int(ref.total_cycles) == int(fast.total_cycles)
