@@ -69,14 +69,15 @@ def _sim_driven_rows() -> list[tuple]:
     flat = [seg for segs in per_op for seg in segs]
     counts = segment_lane_hit_counts(flat, cfgs)   # the one grid replay
     total = traces.total_bursts(flat)
-    base = accel_time_s(stream, soc.accel,
-                        dataclasses.replace(soc.mem, llc=None))["seconds"]
+    base = accel_time_s(
+        stream, acc=soc.accel,
+        mem=dataclasses.replace(soc.mem, llc=None))["seconds"]
     rows = []
     for size, block in sorted(points):
         idx = points.index((size, block))
         mem = dataclasses.replace(soc.mem, llc=cfgs[idx])
         hr = _fold_op_stream_rates(per_op, counts[idx])
-        t = accel_time_s(stream, soc.accel, mem,
+        t = accel_time_s(stream, acc=soc.accel, mem=mem,
                          hit_rates=hr)["seconds"]
         paper = PAPER_ANCHORS.get((size, block))
         note = ("sim-driven op_cycles, full frame" +

@@ -54,7 +54,7 @@ def _sim_driven_rows(sw) -> list[tuple]:
     soc = SoCConfig()
     stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
     solo_rates = op_stream_hit_rates(stream, soc.mem)
-    solo_s = accel_time_s(stream, soc.accel, soc.mem,
+    solo_s = accel_time_s(stream, acc=soc.accel, mem=soc.mem,
                           hit_rates=solo_rates)["seconds"]
     h0 = sw.sim_hit_rates[("l1", 0)]
     rh0 = sw.sim_row_hit_rates[("l1", 0)]
@@ -67,7 +67,7 @@ def _sim_driven_rows(sw) -> list[tuple]:
             extra = max(0.0, rh0 - sw.sim_row_hit_rates[(wss, n)]) * t_act
             mem = dataclasses.replace(mem, llc_eviction_prob=evict,
                                       extra_dram_latency=extra)
-            t = accel_time_s(stream, soc.accel, mem,
+            t = accel_time_s(stream, acc=soc.accel, mem=mem,
                              hit_rates=solo_rates)["seconds"]
             paper = PAPER.get((wss, n))
             note = ("sim-driven eviction/row terms" +

@@ -15,7 +15,7 @@ import time
 
 from benchmarks import campaign_bench, fig4_platforms, fig5_llc
 from benchmarks import fig6_interference, kernel_bench, roofline
-from benchmarks import socsim_bench
+from benchmarks import serve_bench, socsim_bench
 
 SUITES = {
     "fig4": fig4_platforms.run,
@@ -25,6 +25,7 @@ SUITES = {
     "roofline": roofline.run,
     "socsim": socsim_bench.run,
     "campaign": campaign_bench.run,
+    "serve": serve_bench.run,
 }
 
 
@@ -53,6 +54,7 @@ def main() -> None:
         contracts = (
             ("bench_json", "BENCH_SWEEP_JSON", "BENCH_sweep.json"),
             ("campaign_json", "BENCH_CAMPAIGN_JSON", "BENCH_campaign.json"),
+            ("serve_json", "BENCH_SERVE_JSON", "BENCH_serve.json"),
         )
         for key, env, default in contracts:
             path = os.environ.get(env, default)

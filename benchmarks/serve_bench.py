@@ -1,0 +1,160 @@
+"""Serving load sweep: tokens/s and tail latency in simulated SoC time.
+
+The continuous-batching engine (``repro.serve``) is driven at several
+offered loads (Poisson-free deterministic arrival gaps) against a fixed
+request trace.  Every scheduler step is priced by the SoC latency
+oracle — weight + paged-KV + state DBB traces through the exact
+LLC/DRAM segment simulator — so throughput and p50/p99 request latency
+come out in *simulated SoC seconds*, not host wall time.
+
+The LLC is sized to cover the weight stream plus roughly two resident
+requests' KV, so rising occupancy pushes the per-step working set past
+capacity: decode hit rates fall and the latency tail grows with load —
+the serving-side restatement of the paper's Fig. 6 co-runner
+interference (each admitted request is a co-runner for the rest).
+
+Asserts (acceptance criteria):
+
+* >= 3 load points, each reporting tokens/s, p50 and p99 latency;
+* p99 at the highest load exceeds p99 at the lightest load, and the
+  worst decode-step LLC hit rate degrades with occupancy;
+* the fixed request trace + seed is deterministic: two engine runs
+  produce bit-identical tokens and per-step cycle counts.
+
+Emits ``BENCH_serve.json`` (override with ``BENCH_SERVE_JSON``) with
+the full load-sweep curve for CI archiving.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _build_requests(cfg, n_req: int, prompt_len: int, max_new: int,
+                    gap_s: float):
+    from repro.serve import Request
+
+    rng = np.random.default_rng(0)
+    return [
+        Request(rid=i,
+                tokens=tuple(int(x) for x in
+                             rng.integers(3, cfg.vocab_size, prompt_len)),
+                max_new=max_new, arrival_s=i * gap_s)
+        for i in range(n_req)
+    ]
+
+
+def _run_load_point(cfg, params, llc, *, cache_len: int, max_slots: int,
+                    requests) -> dict:
+    from repro.models import decode_working_set
+    from repro.serve import ServeEngine, SoCLatencyOracle
+
+    oracle = SoCLatencyOracle(decode_working_set(cfg), llc=llc)
+    eng = ServeEngine(cfg, params, cache_len=cache_len,
+                      max_slots=max_slots, eos_id=0, oracle=oracle)
+    for r in requests:
+        eng.submit(r)
+    stats = eng.run()
+    decode_hits = [r.llc_hit_rate for r in eng.step_log
+                   if r.kind == "decode" and r.llc_hit_rate is not None]
+    return {
+        "stats": stats,
+        "tokens": [list(f["tokens"]) for f in eng.finished],
+        "cycles": [r.cycles for r in eng.step_log],
+        "decode_hit_min": min(decode_hits) if decode_hits else 1.0,
+    }
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.cache import LLCConfig
+    from repro.models import decode_working_set, init_params
+    from repro.types import param_values
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = param_values(init_params(jax.random.PRNGKey(0), cfg))
+    ws = decode_working_set(cfg)
+
+    cache_len, max_slots = 64, 8
+    n_req, prompt_len, max_new = (8, 20, 8) if smoke else (16, 20, 24)
+    # LLC covers weights + ~2 resident requests' live KV: occupancy
+    # beyond that spills the cyclic per-step working set (Fig. 6,
+    # serving-side).  Set-modulo indexing accepts any ways*block
+    # multiple, so the capacity cliff can sit exactly where we want it.
+    live_kv = ws.kv_bytes(prompt_len + max_new)
+    target = ws.weight_bytes + 2 * live_kv
+    llc = LLCConfig(size_bytes=-(-target // 512) * 512,
+                    ways=8, block_bytes=64)
+
+    gaps = (3e-4, 1e-4, 1e-5) if smoke else (1e-3, 3e-4, 1e-4, 1e-5)
+    rows: list[tuple] = []
+    curve = []
+    t0 = time.time()
+    for gap in gaps:
+        reqs = _build_requests(cfg, n_req, prompt_len, max_new, gap)
+        pt = _run_load_point(cfg, params, llc, cache_len=cache_len,
+                             max_slots=max_slots, requests=reqs)
+        s = pt["stats"]
+        load = 1.0 / gap
+        curve.append({
+            "offered_rps": load, "gap_s": gap,
+            "tokens_per_s": s.tokens_per_s,
+            "latency_p50_s": s.latency_p50_s,
+            "latency_p99_s": s.latency_p99_s,
+            "mean_occupancy": s.mean_occupancy,
+            "max_occupancy": s.max_occupancy,
+            "decode_hit_min": pt["decode_hit_min"],
+            "sim_time_s": s.sim_time_s,
+        })
+        rows.append((f"serve/tps@{load:.0f}rps", f"{s.tokens_per_s:.0f}",
+                     f"occ {s.mean_occupancy:.2f}"))
+        rows.append((f"serve/p50@{load:.0f}rps",
+                     f"{s.latency_p50_s * 1e3:.3f}", "ms"))
+        rows.append((f"serve/p99@{load:.0f}rps",
+                     f"{s.latency_p99_s * 1e3:.3f}", "ms"))
+
+    # -- interference acceptance: the tail degrades with occupancy -------
+    lo, hi = curve[0], curve[-1]
+    assert hi["mean_occupancy"] > lo["mean_occupancy"], \
+        "load sweep failed to raise occupancy"
+    assert hi["latency_p99_s"] > lo["latency_p99_s"], \
+        (f"p99 did not degrade with load: "
+         f"{lo['latency_p99_s']:.6f} -> {hi['latency_p99_s']:.6f}")
+    assert hi["decode_hit_min"] < lo["decode_hit_min"], \
+        (f"decode LLC hit rate did not degrade with occupancy: "
+         f"{lo['decode_hit_min']:.3f} -> {hi['decode_hit_min']:.3f}")
+    rows.append(("serve/p99_degradation",
+                 f"{hi['latency_p99_s'] / lo['latency_p99_s']:.2f}",
+                 "x at max load"))
+
+    # -- determinism acceptance: bit-identical tokens and latencies ------
+    gap = gaps[1]
+    reqs = _build_requests(cfg, n_req, prompt_len, max_new, gap)
+    a = _run_load_point(cfg, params, llc, cache_len=cache_len,
+                        max_slots=max_slots, requests=reqs)
+    b = _run_load_point(cfg, params, llc, cache_len=cache_len,
+                        max_slots=max_slots, requests=reqs)
+    deterministic = a["tokens"] == b["tokens"] and a["cycles"] == b["cycles"]
+    assert deterministic, "serving run is not reproducible"
+    rows.append(("serve/deterministic", "1", "tokens+cycles bit-identical"))
+    rows.append(("serve/wall_seconds", f"{time.time() - t0:.1f}", ""))
+
+    path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump({
+            "arch": "qwen2-0.5b (smoke)",
+            "cache_len": cache_len, "max_slots": max_slots,
+            "n_requests": n_req, "prompt_len": prompt_len,
+            "max_new": max_new,
+            "llc_size_bytes": llc.size_bytes,
+            "weight_bytes": ws.weight_bytes,
+            "curve": curve,
+            "deterministic": deterministic,
+        }, f, indent=1)
+    rows.append(("serve/json", path, "load-sweep curve"))
+    return rows

@@ -24,7 +24,6 @@ from __future__ import annotations
 import json
 import os
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,7 @@ from repro.core.cache import (
 )
 from repro.core.socsim import simulate_dbb_segments, simulate_dbb_stream
 from repro.core.sweep import (
-    batched_hits,
+    _batched_hits,
     grid_configs,
     segment_lane_hit_counts,
     segment_sweep_hit_rates,
@@ -156,9 +155,8 @@ def _bench_sweep(rows: list, smoke: bool = False) -> None:
         return jax.block_until_ready(out)
 
     def batched():
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            return jax.block_until_ready(batched_hits(win, configs))
+        # the private parity oracle — the public wrapper is deprecated
+        return jax.block_until_ready(_batched_hits(win, configs))
 
     ref_w = seed_window()
     got_w = batched()
@@ -174,7 +172,7 @@ def _bench_sweep(rows: list, smoke: bool = False) -> None:
 def _bench_segment_lanes(rows: list, smoke: bool = False) -> None:
     """The tentpole comparison: a full-trace (no window cap) LLC
     geometry sweep through the vmapped segment-lane engine vs the
-    expanded-trace per-access ``batched_hits`` path — bit-identical hit
+    expanded-trace per-access ``_batched_hits`` parity oracle — bit-identical hit
     counts per lane, wall-clock measured on the same grid."""
     if smoke:
         cfgs = grid_configs((8, 1024), (32, 128))
@@ -193,15 +191,11 @@ def _bench_segment_lanes(rows: list, smoke: bool = False) -> None:
     probe = traces.window(frame, probe_bursts)
     addrs = traces.expand(probe)
     lane_counts = segment_lane_hit_counts(probe, configs).sum(axis=1)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        bit_counts = np.asarray(batched_hits(addrs, configs)).sum(axis=1)
+    bit_counts = np.asarray(_batched_hits(addrs, configs)).sum(axis=1)
     assert np.array_equal(lane_counts, bit_counts), "lane parity violation"
 
     def expanded_probe():
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            return jax.block_until_ready(batched_hits(addrs, configs))
+        return jax.block_until_ready(_batched_hits(addrs, configs))
 
     t_probe = _wall(expanded_probe, iters=1)
     t_expanded = t_probe * (n_frame / len(addrs))    # linear in trace len

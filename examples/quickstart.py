@@ -12,9 +12,9 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.core import interference_sweep, llc_sweep, run_yolov3
-from repro.data.synthetic import SyntheticStream, make_batch
+from repro.data.synthetic import SyntheticStream
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.serve import Request, ServeEngine
 from repro.train import AdamWConfig, init_train_state, make_train_step
 from repro.types import param_values
 
@@ -49,13 +49,24 @@ def train_small_lm(steps=20):
 
 
 def serve_small_lm(cfg, state):
-    print("\n== serve: batched prefill + decode ==")
-    eng = ServeEngine(cfg, state.params, cache_len=128, eos_id=0)
-    batch = make_batch(cfg, 4, 32, seed=7)
-    batch.pop("labels")
-    res = eng.generate(batch, max_new=16)
-    print(f"  generated {res.tokens.shape} tokens in {res.steps} steps; "
-          f"lengths {res.lengths.tolist()}")
+    print("\n== serve: continuous batching on the simulated SoC clock ==")
+    import numpy as np
+
+    eng = ServeEngine(cfg, state.params, cache_len=128, max_slots=2,
+                      eos_id=0)
+    rng = np.random.default_rng(7)
+    for i in range(4):
+        eng.submit(Request(
+            rid=i, tokens=tuple(int(t) for t in
+                                rng.integers(3, cfg.vocab_size, 32)),
+            max_new=16, arrival_s=i * 1e-4))
+    stats = eng.run()
+    print(f"  served {stats.requests} requests / {stats.tokens} tokens "
+          f"in {stats.steps} steps")
+    print(f"  simulated: {stats.tokens_per_s:.0f} tok/s, "
+          f"p50 {stats.latency_p50_s * 1e3:.3f} ms, "
+          f"p99 {stats.latency_p99_s * 1e3:.3f} ms, "
+          f"peak occupancy {stats.max_occupancy}")
 
 
 if __name__ == "__main__":

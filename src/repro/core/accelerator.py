@@ -206,15 +206,40 @@ def op_stream_hit_rates_grid(stream: CommandStream,
             for g in range(len(llc_configs))]
 
 
-def accel_time_s(stream: CommandStream, acc: AccelConfig,
-                 mem: MemSystemConfig, *, mode: str = "model",
+def accel_time_s(stream: CommandStream, *legacy,
+                 acc: AccelConfig | None = None,
+                 mem: MemSystemConfig | None = None, mode: str = "model",
                  hit_rates: list | None = None) -> dict:
     """NVDLA-side frame time.  ``mode="model"`` uses the closed-form
     stream-locality hit rates (the calibrated paper model);
     ``mode="simulated"`` drives every layer's hit rates from the exact
     segment simulator on that layer's real DBB trace (``hit_rates``
     short-circuits the simulation when the caller already has them —
-    e.g. a sweep reusing one simulation across co-runner counts)."""
+    e.g. a sweep reusing one simulation across co-runner counts).
+
+    Configs are keyword-only (``acc=``, ``mem=``), matching the
+    ``llc=``/``dram=``/``mix=`` convention of the sweep APIs;
+    positional configs still work for one release with a
+    ``DeprecationWarning``."""
+    if legacy:
+        if len(legacy) > 2:
+            raise TypeError("accel_time_s() takes at most 2 positional "
+                            f"configs, got {len(legacy)}")
+        import warnings
+
+        warnings.warn(
+            "positional configs to accel_time_s() are deprecated; pass "
+            "acc=/mem= keyword-only (the shared convention across the "
+            "sweep/pipeline APIs)", DeprecationWarning, stacklevel=2)
+        if acc is not None or (mem is not None and len(legacy) > 1):
+            raise TypeError("accel_time_s() got a config both positionally "
+                            "and by keyword")
+        acc = legacy[0]
+        if len(legacy) > 1:
+            mem = legacy[1]
+    if acc is None or mem is None:
+        raise TypeError("accel_time_s() missing required keyword "
+                        "argument(s): acc=/mem=")
     if mode not in ("model", "simulated"):
         raise ValueError(f"unknown mode {mode!r}")
     if mode == "simulated" and hit_rates is None:

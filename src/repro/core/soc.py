@@ -72,7 +72,7 @@ def run_yolov3(soc: SoCConfig = SoCConfig(), *, co_runners: int = 0,
     stream model (see ``repro.core.accelerator.accel_time_s``)."""
     stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
     mem = with_corunners(soc.mem, co_runners, wss)
-    accel = accel_time_s(stream, soc.accel, mem, mode=mode)
+    accel = accel_time_s(stream, acc=soc.accel, mem=mem, mode=mode)
     cpu_s = cpu_time_s(stream, soc.cpu)
     return FrameReport(accel_s=accel["seconds"], cpu_s=cpu_s,
                        detail={"accel": accel, "stream": stream})
@@ -102,8 +102,9 @@ def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
     hit rates into the timing model: the cycle-exact-over-analytical
     path.  The no-LLC baseline has nothing to simulate and is shared."""
     stream = compile_network(conv_buf_bytes=soc.accel.conv_buf_bytes)
-    base = accel_time_s(stream, soc.accel,
-                        dataclasses.replace(soc.mem, llc=None))["seconds"]
+    base = accel_time_s(
+        stream, acc=soc.accel,
+        mem=dataclasses.replace(soc.mem, llc=None))["seconds"]
     points = [(size, block) for block in blocks for size in sizes_kib]
     rates_grid = None
     if mode == "simulated":
@@ -115,7 +116,7 @@ def llc_sweep(sizes_kib=(0.5, 2, 8, 64, 512, 1024, 4096),
     for i, (size, block) in enumerate(points):
         mem = dataclasses.replace(soc.mem, llc=llc_config_for(size, block))
         t = accel_time_s(
-            stream, soc.accel, mem, mode=mode,
+            stream, acc=soc.accel, mem=mem, mode=mode,
             hit_rates=rates_grid[i] if rates_grid else None)["seconds"]
         out["grid"][(size, block)] = base / t
     return out

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -107,19 +108,46 @@ def _mem_pipeline(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
                           dram_component(llc_cfg, dram_cfg)])
 
 
-def simulate_dbb_stream(byte_addrs, *, llc: LLCConfig,
+def _legacy_configs(fn_name: str, legacy: tuple, llc, dram):
+    """One-release escape hatch: positional (llc, dram) still works but
+    warns.  Returns the resolved (llc, dram); raises ``TypeError`` on a
+    config passed both ways or a missing ``llc``."""
+    if legacy:
+        if len(legacy) > 2:
+            raise TypeError(f"{fn_name}() takes at most 2 positional "
+                            f"configs, got {len(legacy)}")
+        warnings.warn(
+            f"positional configs to {fn_name}() are deprecated; pass "
+            "llc=/dram= keyword-only (the shared convention across the "
+            "sweep/pipeline APIs)", DeprecationWarning, stacklevel=3)
+        if llc is not None or (dram is not None and len(legacy) > 1):
+            raise TypeError(f"{fn_name}() got a config both positionally "
+                            "and by keyword")
+        llc = legacy[0]
+        if len(legacy) > 1:
+            dram = legacy[1]
+    if llc is None:
+        raise TypeError(f"{fn_name}() missing required keyword argument "
+                        "'llc'")
+    return llc, dram
+
+
+def simulate_dbb_stream(byte_addrs, *legacy, llc: LLCConfig | None = None,
                         dram: DRAMConfig | None = None,
                         host_stalls=None,
                         early_exit: bool = True) -> MemPipelineResult:
     """Replay a DBB burst-address trace through the LLC -> DRAM pipeline.
 
     Configs are keyword-only (``llc=``, ``dram=``) — the shared
-    convention across the sweep/pipeline APIs.  ``early_exit=False``
-    forces the seed's fixed-length host schedule (used by benchmarks as
-    the before/after baseline); results are bit-identical either way.
+    convention across the sweep/pipeline APIs; positional configs still
+    work for one release but emit ``DeprecationWarning``.
+    ``early_exit=False`` forces the seed's fixed-length host schedule
+    (used by benchmarks as the before/after baseline); results are
+    bit-identical either way.
     """
     from repro.utils.env import x64_enabled
 
+    llc, dram = _legacy_configs("simulate_dbb_stream", legacy, llc, dram)
     dram = dram or DRAMConfig()
     addrs = as_address_array(byte_addrs, what="DBB byte address")
     pipe = _mem_pipeline(llc, dram, x64_enabled())
@@ -245,7 +273,7 @@ class SegmentPipelineResult:
         return self
 
 
-def simulate_dbb_segments(segments, *, llc: LLCConfig,
+def simulate_dbb_segments(segments, *legacy, llc: LLCConfig | None = None,
                           dram: DRAMConfig | None = None,
                           t_llc_hit: int = 20) -> SegmentPipelineResult:
     """Latency totals of the LLC -> DRAM pipeline over a *compressed*
@@ -262,11 +290,13 @@ def simulate_dbb_segments(segments, *, llc: LLCConfig,
 
     Requires ``dram.row_bytes % llc.block_bytes == 0`` (every standard
     geometry) so a missed block's row is independent of which burst in
-    the block missed.
+    the block missed.  Configs are keyword-only (``llc=``, ``dram=``);
+    positional use warns for one release.
     """
     from repro.core.cache import simulate_segments
     from repro.core.dram import segment_row_hits
 
+    llc, dram = _legacy_configs("simulate_dbb_segments", legacy, llc, dram)
     dram = dram or DRAMConfig()
     bb = llc.block_bytes
     if dram.row_bytes % bb:

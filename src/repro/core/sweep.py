@@ -764,6 +764,70 @@ def interference_lane_metrics(nvdla_segs: list, *, llc: LLCConfig,
         nv_hits=int(res.per_segment_hits[nv].sum()))
 
 
+def _marginal_lane_metrics(full: LaneMetrics, warm: LaneMetrics
+                           ) -> LaneMetrics:
+    """Counter-wise difference of two lane records (full − warm), with
+    the derived rates recomputed from the differenced counters.  Exact
+    whenever ``warm``'s trace is a prefix of ``full``'s: the LLC engine
+    and the DRAM open-row carry are both left-to-right, so the prefix's
+    counters are unchanged by what follows and subtraction isolates the
+    suffix — including the closed-form latency identity, which is linear
+    in the counters."""
+    d = {f: getattr(full, f) - getattr(warm, f)
+         for f in LaneMetrics._INT_FIELDS if f != "t_llc_hit"}
+    if full.t_llc_hit != warm.t_llc_hit:
+        raise ValueError("marginal lane metrics need matching t_llc_hit")
+    nv_miss = d["nvdla_misses"]
+    return LaneMetrics(
+        t_llc_hit=full.t_llc_hit,
+        hit_rate=d["llc_hits"] / max(1, d["accesses"]),
+        nvdla_hit_rate=d["nvdla_hits"] / max(1, d["nvdla_accesses"]),
+        nvdla_miss_row_hit_rate=(d["nvdla_miss_row_hits"] / nv_miss
+                                 if nv_miss else 1.0),
+        **d)
+
+
+def step_lane_metrics(segments: list, *, llc: LLCConfig, dram,
+                      mix: MixConfig | None = None,
+                      warm_prefix: list | None = None,
+                      chunk_bursts: int = 16,
+                      t_llc_hit: int = 20) -> LaneMetrics:
+    """One scheduler step's DBB stream reduced to a typed lane record —
+    the reusable step-latency entry point behind ``repro.serve``.
+
+    Without ``warm_prefix`` this is a cold-cache
+    ``interference_lane_metrics`` lane.  With it, the step is simulated
+    *after* the prefix (LLC state and DRAM open rows warmed by it, the
+    co-runner interleave continuing causally across the boundary) and
+    the returned record is the exact marginal cost of the step:
+    ``sim(prefix + step) − sim(prefix)``.  Passing the step trace itself
+    as its own warm prefix yields the steady-state per-step cost of a
+    periodic working set — which is how a serving engine's decode step
+    sees occupancy-dependent LLC contention (the Fig. 6 effect): working
+    sets that fit the LLC re-hit across steps, and each admitted
+    co-resident sequence grows the cyclic re-reference distance until
+    the shared cache stops covering it.
+
+    The subtraction is exact, not approximate: ``corunner_segments``
+    chunks per segment so the prefix's interleaved trace is a prefix of
+    the combined interleaved trace, and every counter (LLC hits, DRAM
+    row hits, the latency total) is a left-to-right fold over that
+    trace.  ``tests/test_sweep.py`` asserts the identity against an
+    explicitly warmed reference."""
+    mix = mix or MixConfig()
+    if warm_prefix is None:
+        return interference_lane_metrics(
+            segments, llc=llc, dram=dram, mix=mix,
+            chunk_bursts=chunk_bursts, t_llc_hit=t_llc_hit)
+    full = interference_lane_metrics(
+        list(warm_prefix) + list(segments), llc=llc, dram=dram, mix=mix,
+        chunk_bursts=chunk_bursts, t_llc_hit=t_llc_hit)
+    warm = interference_lane_metrics(
+        list(warm_prefix), llc=llc, dram=dram, mix=mix,
+        chunk_bursts=chunk_bursts, t_llc_hit=t_llc_hit)
+    return _marginal_lane_metrics(full, warm)
+
+
 def _lane_miss_runs(base, stride, count, llc: LLCConfig, cold: np.ndarray,
                     miss_bits: np.ndarray) -> tuple:
     """Reconstruct one lane's exact missed-block runs from the vmapped

@@ -50,7 +50,7 @@ from repro.launch.specs import (
     param_sharding_tree,
     token_count,
 )
-from repro.models import decode_step, pattern_split, prefill
+from repro.models import pattern_split, prefill, slot_decode_step
 from repro.sharding import activate_rules
 from repro.train.optim import AdamWConfig
 from repro.train.step import make_train_step
@@ -81,9 +81,9 @@ def build_lowered(cfg, shape, *, donate: bool = True, microbatches: int = 1):
         b_sh = batch_shardings(batch)
         fn = lambda p, b: prefill(p, b, cfg, shape.seq_len)
         return jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(params, batch)
-    # decode
+    # decode: per-slot positions (the serving engine's step)
     args, shardings = abstract_decode_state(cfg, shape)
-    fn = lambda p, c, tok, t: decode_step(p, c, tok, t, cfg)
+    fn = lambda p, c, tok, ts: slot_decode_step(p, c, tok, ts, cfg)
     jitted = jax.jit(fn, in_shardings=shardings,
                      donate_argnums=(1,) if donate else ())
     return jitted.lower(*args)

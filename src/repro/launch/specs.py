@@ -81,18 +81,23 @@ def abstract_train_state(cfg: ModelConfig):
 
 
 def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
-    """((params, caches, token, t) SDS tuple, matching shardings)."""
+    """((params, caches, tokens, ts) SDS tuple, matching shardings).
+
+    The decode cell lowers the serving engine's per-slot step
+    (``models.slot_decode_step``): each batch row carries its own
+    position ``ts[i]``, so a continuous-batching scheduler can advance
+    slots at different depths in one jitted call.
+    """
     b = shape.global_batch
     params_p = abstract_params(cfg)
     caches_p = init_caches(cfg, b, shape.seq_len, abstract=True)
     token = _sds((b, 1), jnp.int32)
-    t = _sds((), jnp.int32)
-    rep = sharding_for((), ())
-    args = (param_values(params_p), param_values(caches_p), token, t)
+    ts = _sds((b,), jnp.int32)
+    args = (param_values(params_p), param_values(caches_p), token, ts)
     shardings = (
         param_sharding_tree(params_p),
         param_sharding_tree(caches_p),
         sharding_for((b, 1), ("act_batch", None)),
-        rep,
+        sharding_for((b,), ("act_batch",)),
     )
     return args, shardings

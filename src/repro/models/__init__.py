@@ -1,8 +1,12 @@
 """Model zoo public API."""
 from repro.models.decoding import (  # noqa: F401
+    DecodeWorkingSet,
+    cache_slot_axes,
     decode_step,
+    decode_working_set,
     init_caches,
     prefill,
+    slot_decode_step,
 )
 from repro.models.transformer import (  # noqa: F401
     forward,

@@ -18,6 +18,8 @@ Cache kinds
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -209,3 +211,115 @@ def decode_step(params, caches, token: jax.Array, t: jax.Array,
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)[:, 0]
     return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# per-slot decode: independent positions per batch row
+# --------------------------------------------------------------------------
+def cache_slot_axes(caches) -> dict:
+    """Per-leaf batch-axis tree for the decode cache pytree.
+
+    ``blocks`` leaves are layer-stacked (layers, B, ...) so their slot
+    axis is 1; ``rem`` leaves are batch-leading.  The returned tree has
+    the same structure as ``caches`` with ints at the leaves — usable
+    directly as ``vmap`` in/out axes or to locate the slot axis when
+    scattering prefill rows into an engine's slot caches."""
+    return {k: jax.tree_util.tree_map(lambda _: 1 if k == "blocks" else 0, v)
+            for k, v in caches.items()}
+
+
+def slot_decode_step(params, caches, tokens: jax.Array, ts: jax.Array,
+                     cfg: ModelConfig):
+    """One decode step with an *independent position per row*.
+
+    ``tokens`` (B, 1) int32, ``ts`` (B,) int32 absolute positions.  Each
+    row runs the batch-1 ``decode_step`` under ``jax.vmap`` over the
+    cache slot axis, so rows at heterogeneous sequence lengths advance
+    in one kernel — the continuous-batching decode kernel.  Bit-identical
+    to ``decode_step`` when all positions agree (tests/test_serve.py).
+
+    Returns (logits (B, padded_vocab) fp32, new_caches).
+    """
+    axes = cache_slot_axes(caches)
+
+    def one(cache, token, t):
+        cache = {k: jax.tree_util.tree_map(
+                    lambda x, kk=k: jnp.expand_dims(x, 1 if kk == "blocks"
+                                                    else 0), v)
+                 for k, v in cache.items()}
+        lg, nc = decode_step(params, cache, token[None], t, cfg)
+        nc = {k: jax.tree_util.tree_map(
+                 lambda x, kk=k: (x[:, 0] if kk == "blocks" else x[0]), v)
+              for k, v in nc.items()}
+        return lg[0], nc
+
+    return jax.vmap(one, in_axes=(axes, 0, 0), out_axes=(0, axes))(
+        caches, tokens, ts)
+
+
+# --------------------------------------------------------------------------
+# decode working set: the byte model behind the serving latency oracle
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DecodeWorkingSet:
+    """Per-step memory working set of one decoding sequence.
+
+    ``kv_entries`` is (window, per_token_bytes) per decoder layer —
+    window 0 means the full context is live (dense attention), a
+    positive window caps the rolling buffer.  ``state_bytes`` is the
+    length-independent per-step read set (SSM/RG-LRU recurrent state,
+    conv tails, whisper cross-attention KV).  ``weight_bytes`` is the
+    streamed parameter footprint per step (every active parameter is
+    read once per decoded token)."""
+    weight_bytes: int
+    kv_entries: tuple[tuple[int, int], ...]
+    state_bytes: int
+
+    def kv_bytes(self, tokens: int) -> int:
+        """Live KV bytes read by one decode step at sequence length
+        ``tokens`` (windowed layers cap at their buffer)."""
+        return sum((min(tokens, w) if w else tokens) * per
+                   for w, per in self.kv_entries)
+
+    @property
+    def kv_token_bytes(self) -> int:
+        """Marginal KV bytes appended per decoded token (block-sizing
+        rate for the paged allocator; windowed layers recycle slots but
+        the pool accounts their peak via ``kv_bytes``)."""
+        return sum(per for _, per in self.kv_entries)
+
+
+def decode_working_set(cfg: ModelConfig) -> DecodeWorkingSet:
+    """Byte-level working set of one decode step, mirroring the cache
+    layout ``init_caches`` builds (same windows, dtypes, int8 scales).
+
+    This is what ``repro.serve.oracle`` lowers to DBB segment traces:
+    weights stream once per step, each sequence re-reads its live KV,
+    and recurrent/cross state is a constant per-step read."""
+    dt_bytes = jnp.dtype(L.compute_dtype(cfg)).itemsize
+    window = _attn_window(cfg)
+    kv_entries = []
+    state = 0
+    for kind in cfg.layer_kinds():
+        if kind == "ssm":
+            conv = (cfg.ssm_conv - 1) * ssm_mod._conv_channels(cfg) * 2
+            ssm = cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_head_dim * 4
+            state += conv + ssm
+            continue
+        if kind == "rec":
+            w = cfg.rglru_width or cfg.d_model
+            state += (cfg.rglru_conv - 1) * w * 2 + w * 4
+            continue
+        # attention: K + V per cached token (+ int8 scales)
+        if cfg.kv_cache_dtype == "int8":
+            per = 2 * cfg.num_kv_heads * (cfg.head_dim + 4)
+        else:
+            per = 2 * cfg.num_kv_heads * cfg.head_dim * dt_bytes
+        kv_entries.append((window, per))
+        if cfg.is_encoder_decoder:   # precomputed cross KV, read each step
+            state += (2 * cfg.encoder_len * cfg.num_kv_heads
+                      * cfg.head_dim * dt_bytes)
+    return DecodeWorkingSet(
+        weight_bytes=int(cfg.active_param_count() * dt_bytes),
+        kv_entries=tuple(kv_entries),
+        state_bytes=int(state))

@@ -1,1 +1,14 @@
-from repro.serve.engine import ServeEngine, GenerationResult  # noqa: F401
+"""Serving: continuous batching scheduled by simulated SoC latencies."""
+from repro.serve.engine import (  # noqa: F401
+    EngineStats,
+    GenerationResult,
+    Request,
+    ServeEngine,
+    StepResult,
+)
+from repro.serve.kvcache import (  # noqa: F401
+    BlockTable,
+    OutOfBlocksError,
+    PagedKVCache,
+)
+from repro.serve.oracle import SoCLatencyOracle, StepLatency  # noqa: F401

@@ -1,0 +1,202 @@
+"""Paged KV cache: allocator invariants, addressing, and the partition
+property (free list ∪ block tables == the whole pool, no aliasing)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import traces
+from repro.serve import OutOfBlocksError, PagedKVCache
+from repro.serve.kvcache import KV_REGION, STATE_REGION
+
+
+def _pool(num_blocks=8, block_size=4, token_bytes=16):
+    return PagedKVCache(num_blocks=num_blocks, block_size=block_size,
+                        token_bytes=token_bytes)
+
+
+def test_admit_reserves_full_budget_up_front():
+    kv = _pool(num_blocks=8, block_size=4)
+    # prompt 5 + max_new 6 = 11 tokens -> 3 blocks, reserved immediately
+    tbl = kv.admit(0, 5, 6)
+    assert len(tbl.block_ids) == 3 and tbl.tokens == 5
+    assert kv.free_blocks == 5
+    # appends stay inside the block-granular reservation (3 blocks hold
+    # 12 tokens); the table never grows past it
+    for _ in range(7):
+        kv.append(0)
+    assert kv.table(0).tokens == 12
+    with pytest.raises(OutOfBlocksError, match="reservation"):
+        kv.append(0)
+    kv.check_partition()
+
+
+def test_alloc_free_reuse_and_no_aliasing():
+    kv = _pool(num_blocks=8, block_size=4)
+    a = kv.admit(0, 4, 4)          # 2 blocks
+    b = kv.admit(1, 4, 4)          # 2 blocks
+    assert not set(a.block_ids) & set(b.block_ids), "aliased blocks"
+    # fresh pools hand out compact low ids deterministically
+    assert a.block_ids == (0, 1) and b.block_ids == (2, 3)
+    kv.release(0)
+    c = kv.admit(2, 8, 0)          # 2 blocks: LIFO reuses 0,1 hottest-first
+    assert c.block_ids == (0, 1)
+    kv.check_partition()
+    kv.release(1)
+    kv.release(2)
+    assert kv.free_blocks == 8
+    kv.check_partition()
+
+
+def test_out_of_blocks_and_duplicate_rid():
+    kv = _pool(num_blocks=4, block_size=4)
+    kv.admit(0, 8, 4)              # 3 blocks
+    assert not kv.can_admit(8)
+    with pytest.raises(OutOfBlocksError, match="needs 2 blocks"):
+        kv.admit(1, 4, 4)
+    with pytest.raises(ValueError, match="already admitted"):
+        kv.admit(0, 4, 0)
+    with pytest.raises(ValueError, match="at least one"):
+        kv.admit(2, 0, 4)
+    with pytest.raises(KeyError):
+        kv.append(9)
+
+
+def test_addressing_and_read_segments():
+    kv = _pool(num_blocks=8, block_size=4, token_bytes=48)
+    # 4 tokens x 48 B = 192 B raw, already 64 B line-aligned
+    assert kv.block_bytes == 192
+    assert kv.block_address(0) == KV_REGION
+    assert kv.block_address(3) == KV_REGION + 3 * 192
+    kv.admit(0, 6, 2)              # 2 blocks, 6 tokens written
+    segs = kv.read_segments(0)
+    assert [s.stream for s in segs] == ["kv0", "kv0"]
+    assert segs[0].base == kv.block_address(0)
+    # full first block: 4 tok x 48 B / 32 B bursts = 6 bursts
+    assert segs[0].count == 6
+    # partial second block: 2 tok x 48 B -> 3 bursts
+    assert segs[1].count == 3
+    # tokens= caps the read below the written length (windowed WSS)
+    capped = kv.read_segments(0, tokens=3)
+    assert len(capped) == 1 and capped[0].count == 5    # ceil(144/32)
+    total = sum(s.count for s in kv.read_segments(0))
+    assert total == -(-6 * 48 // traces.BURST_BYTES)
+
+
+def test_region_bounds_are_int32_safe():
+    # the exact segment engine carries bases as int32: pools must refuse
+    # to span into the state region or past 2**31
+    too_many = (STATE_REGION - KV_REGION) // 64 + 1
+    with pytest.raises(ValueError, match="state"):
+        PagedKVCache(num_blocks=too_many, block_size=1, token_bytes=64)
+    with pytest.raises(ValueError, match="int32"):
+        PagedKVCache(num_blocks=1024, block_size=1, token_bytes=64,
+                     region_base=(1 << 31) - 1024)
+
+
+def test_snapshot_restore_round_trip():
+    kv = _pool(num_blocks=8, block_size=4)
+    kv.admit(0, 4, 4)
+    kv.admit(1, 6, 2)
+    kv.append(0, 2)
+    snap = kv.snapshot()
+    kv2 = _pool(num_blocks=8, block_size=4)
+    kv2.restore(snap)
+    assert kv2.table(0) == kv.table(0)
+    assert kv2.table(1) == kv.table(1)
+    assert kv2.free_blocks == kv.free_blocks
+    kv2.release(0)
+    kv2.check_partition()
+    # the donor pool is untouched by mutations of the restored copy
+    assert kv.table(0).tokens == 6
+
+
+def test_check_partition_catches_corruption():
+    kv = _pool(num_blocks=4, block_size=4)
+    kv.admit(0, 4, 0)
+    kv._free.append(kv.table(0).block_ids[0])      # alias a live block
+    with pytest.raises(AssertionError, match="aliased"):
+        kv.check_partition()
+    kv2 = _pool(num_blocks=4, block_size=4)
+    kv2._free.pop()                                 # leak a block
+    with pytest.raises(AssertionError, match="leaked"):
+        kv2.check_partition()
+
+
+def test_partition_property_random_walk():
+    """Plain-random analogue of the hypothesis property below (runs even
+    without hypothesis installed)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    kv = _pool(num_blocks=16, block_size=4)
+    live: list[int] = []
+    next_rid = 0
+    for _ in range(300):
+        op = rng.integers(3)
+        if op == 0:
+            prompt = int(rng.integers(1, 12))
+            new = int(rng.integers(0, 12))
+            try:
+                kv.admit(next_rid, prompt, new)
+                live.append(next_rid)
+                next_rid += 1
+            except OutOfBlocksError:
+                pass
+        elif op == 1 and live:
+            rid = live[rng.integers(len(live))]
+            try:
+                kv.append(rid)
+            except OutOfBlocksError:
+                pass
+        elif op == 2 and live:
+            kv.release(live.pop(rng.integers(len(live))))
+        kv.check_partition()
+    for rid in live:
+        kv.release(rid)
+    assert kv.free_blocks == 16
+    kv.check_partition()
+
+
+def test_partition_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"), st.integers(1, 12),
+                      st.integers(0, 12)),
+            st.tuples(st.just("append"), st.integers(0, 7),
+                      st.just(0)),
+            st.tuples(st.just("release"), st.integers(0, 7),
+                      st.just(0)),
+        ),
+        min_size=1, max_size=60)
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=ops)
+    def prop(ops):
+        kv = _pool(num_blocks=12, block_size=4)
+        live: list[int] = []
+        next_rid = 0
+        for op, a, b in ops:
+            if op == "admit":
+                try:
+                    kv.admit(next_rid, a, b)
+                    live.append(next_rid)
+                    next_rid += 1
+                except OutOfBlocksError:
+                    pass
+            elif op == "append" and live:
+                try:
+                    kv.append(live[a % len(live)])
+                except OutOfBlocksError:
+                    pass
+            elif op == "release" and live:
+                kv.release(live.pop(a % len(live)))
+            kv.check_partition()
+        while live:
+            kv.release(live.pop())
+        assert kv.free_blocks == 12
+        kv.check_partition()
+
+    prop()

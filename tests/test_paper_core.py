@@ -197,8 +197,12 @@ def test_accel_time_s_mode_validation():
 
     stream = compile_network()
     with pytest.raises(ValueError, match="mode"):
-        accel_time_s(stream, AccelConfig(), MemSystemConfig(),
+        accel_time_s(stream, acc=AccelConfig(), mem=MemSystemConfig(),
                      mode="cycle-exact")
+    with pytest.warns(DeprecationWarning, match="positional"):
+        accel_time_s(stream, AccelConfig(), MemSystemConfig())
+    with pytest.raises(TypeError, match="acc=/mem="):
+        accel_time_s(stream, acc=AccelConfig())
 
 
 def test_recalibration_agrees_with_simulated_grid():

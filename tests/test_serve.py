@@ -1,37 +1,275 @@
-"""Serving engine: batched generate with EOS masking."""
+"""Serving engine: continuous batching, the deprecated ``generate()``
+shim's bit-exact parity with the seed loop, scheduler determinism, and
+the typed record surfaces."""
 from __future__ import annotations
+
+import json
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.synthetic import make_batch
-from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.models import decode_step, init_params, prefill
+from repro.serve import (
+    EngineStats,
+    Request,
+    ServeEngine,
+    SoCLatencyOracle,
+    StepResult,
+)
 from repro.types import param_values
 
 
-def test_generate_batched():
-    cfg = get_smoke_config("qwen2-0.5b")
-    params = param_values(init_params(jax.random.PRNGKey(0), cfg))
+def _setup(arch="qwen2-0.5b", seed=0):
+    cfg = get_smoke_config(arch)
+    params = param_values(init_params(jax.random.PRNGKey(seed), cfg))
+    return cfg, params
+
+
+def _seed_reference_generate(cfg, params, batch, max_new, cache_len,
+                             eos_id):
+    """The seed's padded static-batch greedy loop, inlined: batched
+    prefill, then full-batch ``decode_step`` with EOS masking.  The
+    engine shim must reproduce these tokens bit-exactly."""
+    v = cfg.vocab_size
+    logits, caches, t = prefill(params, batch, cfg, cache_len)
+    tok = np.asarray([int(np.argmax(np.asarray(r)[:v])) for r in logits],
+                     np.int32)
+    done = tok == eos_id
+    out = [tok.copy()]
+    for _ in range(max_new - 1):
+        if done.all():
+            break
+        logits, caches = decode_step(params, caches, tok[:, None], t, cfg)
+        t = t + 1
+        tok = np.asarray(
+            [int(np.argmax(np.asarray(r)[:v])) for r in logits], np.int32)
+        tok = np.where(done, eos_id, tok)
+        out.append(tok.copy())
+        done |= tok == eos_id
+    toks = np.stack(out, axis=1)
+    lengths = np.argmax(toks == eos_id, axis=1)
+    lengths = np.where((toks == eos_id).any(axis=1), lengths,
+                       toks.shape[1])
+    return toks, lengths
+
+
+# --------------------------------------------------------------------------
+# deprecated shim: seed parity
+# --------------------------------------------------------------------------
+def test_generate_shim_matches_seed_loop_bit_exact():
+    cfg, params = _setup()
     batch = make_batch(cfg, 3, 16, seed=0)
     batch.pop("labels")
-    eng = ServeEngine(cfg, params, cache_len=64, eos_id=0, temperature=0.0)
-    res = eng.generate(batch, max_new=8)
-    assert res.tokens.shape[0] == 3
-    assert res.tokens.shape[1] <= 8
-    assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab_size).all()
-    # greedy decode is deterministic
-    res2 = eng.generate(batch, max_new=8)
-    np.testing.assert_array_equal(res.tokens, res2.tokens)
+    ref_toks, ref_lens = _seed_reference_generate(
+        cfg, params, batch, max_new=8, cache_len=64, eos_id=0)
+    eng = ServeEngine(cfg, params, cache_len=64, eos_id=0)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        res = eng.generate(batch, max_new=8)
+    np.testing.assert_array_equal(res.tokens, ref_toks)
+    np.testing.assert_array_equal(res.lengths, ref_lens)
 
 
-def test_generate_hybrid_and_ssm():
-    for arch in ("mamba2-130m", "recurrentgemma-9b"):
+def test_generate_shim_parity_with_queueing():
+    """max_slots below the batch size forces the shim's requests through
+    queued continuous batching — greedy rows are batch-size invariant,
+    so tokens must still match the padded static-batch loop."""
+    cfg, params = _setup()
+    batch = make_batch(cfg, 4, 16, seed=2)
+    batch.pop("labels")
+    ref_toks, _ = _seed_reference_generate(
+        cfg, params, batch, max_new=6, cache_len=64, eos_id=0)
+    eng = ServeEngine(cfg, params, cache_len=64, max_slots=2, eos_id=0)
+    with pytest.warns(DeprecationWarning):
+        res = eng.generate(batch, max_new=6)
+    np.testing.assert_array_equal(res.tokens, ref_toks)
+
+
+def test_generate_hybrid_ssm_and_encoder_decoder():
+    """The shim (and the extras path for whisper's frames) works across
+    cache families: attention KV, SSM state, recurrent hybrid."""
+    for arch in ("mamba2-130m", "recurrentgemma-9b", "whisper-tiny"):
         cfg = get_smoke_config(arch)
         params = param_values(init_params(jax.random.PRNGKey(1), cfg))
         batch = make_batch(cfg, 2, 16, seed=1)
         batch.pop("labels")
         eng = ServeEngine(cfg, params, cache_len=64, eos_id=0)
-        res = eng.generate(batch, max_new=4)
+        with pytest.warns(DeprecationWarning):
+            res = eng.generate(batch, max_new=4)
         assert res.tokens.shape[0] == 2
+        assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab_size).all()
+
+
+# --------------------------------------------------------------------------
+# continuous batching
+# --------------------------------------------------------------------------
+def _requests(cfg, n, prompt_len=12, max_new=6, gap_s=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=tuple(int(x) for x in
+                                 rng.integers(3, cfg.vocab_size, prompt_len)),
+                    max_new=max_new, arrival_s=i * gap_s)
+            for i in range(n)]
+
+
+def test_continuous_batching_over_limited_slots():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, cache_len=32, max_slots=2, eos_id=0)
+    for r in _requests(cfg, 5):
+        eng.submit(r)
+    stats = eng.run()
+    assert stats.requests == 5
+    assert stats.max_occupancy == 2          # never exceeds the slots
+    assert {f["rid"] for f in eng.finished} == set(range(5))
+    # admission interleaves with decode: some steps must be mixed or a
+    # later prefill lands while earlier requests are mid-decode
+    kinds = [r.kind for r in eng.step_log]
+    assert kinds[0] == "prefill"
+    assert any(k in ("mixed", "prefill") for k in kinds[1:])
+    assert stats.sim_time_s > 0 and stats.tokens_per_s > 0
+    # the pool drained cleanly
+    eng.kv.check_partition()
+    assert eng.kv.free_blocks == eng.kv.num_blocks
+    # the clock is the oracle's, monotone across the log
+    times = [r.sim_time_s for r in eng.step_log]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+def test_occupancy_degrades_llc_hit_rate():
+    """The Fig. 6 serving-side effect: with the LLC sized to ~cover the
+    weights, each co-resident request's KV stream grows the cyclic
+    working set and the steady-state decode hit rate drops."""
+    from repro.core.cache import LLCConfig
+    from repro.models import decode_working_set
+
+    cfg, params = _setup()
+    ws = decode_working_set(cfg)
+    llc = LLCConfig(size_bytes=-(-ws.weight_bytes // 512) * 512 + 4096,
+                    ways=8, block_bytes=64)
+
+    def min_decode_hit(n_req):
+        eng = ServeEngine(cfg, params, cache_len=64, max_slots=8, eos_id=0,
+                          oracle=SoCLatencyOracle(ws, llc=llc))
+        for r in _requests(cfg, n_req, prompt_len=20, max_new=16):
+            eng.submit(r)
+        eng.run()
+        hits = [r.llc_hit_rate for r in eng.step_log
+                if r.kind == "decode" and r.llc_hit_rate is not None]
+        return min(hits)
+
+    assert min_decode_hit(6) < min_decode_hit(1)
+
+
+def test_idle_step_fast_forwards_to_arrival():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, cache_len=32, eos_id=0)
+    eng.submit(Request(rid=0, tokens=(5, 6, 7), max_new=2,
+                       arrival_s=1e-3))
+    first = eng.step()
+    assert first.kind == "idle"
+    assert eng.clock_s >= 1e-3
+    eng.run()
+    assert eng.stats().requests == 1
+    assert eng.stats().idle_steps == 1
+
+
+def test_submit_validation():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, cache_len=16, eos_id=0)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        eng.submit(Request(rid=0, tokens=tuple(range(3, 15)), max_new=8))
+    eng.submit(Request(rid=1, tokens=(3, 4, 5), max_new=4))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(Request(rid=1, tokens=(3, 4), max_new=2))
+    with pytest.raises(ValueError, match="at least one prompt token"):
+        Request(rid=2, tokens=(), max_new=2)
+    with pytest.raises(ValueError, match="max_new"):
+        Request(rid=2, tokens=(3,), max_new=0)
+
+
+def test_keyword_only_engine_config():
+    cfg, params = _setup()
+    with pytest.raises(TypeError):
+        ServeEngine(cfg, params, 64)         # cache_len must be keyword
+
+
+# --------------------------------------------------------------------------
+# determinism
+# --------------------------------------------------------------------------
+def _run_trace(cfg, params, n=4, seed=3):
+    eng = ServeEngine(cfg, params, cache_len=32, max_slots=2, eos_id=0)
+    for r in _requests(cfg, n, gap_s=2e-5, seed=seed):
+        eng.submit(r)
+    stats = eng.run()
+    return eng, stats
+
+
+def test_scheduler_determinism_across_runs():
+    cfg, params = _setup()
+    a, sa = _run_trace(cfg, params)
+    b, sb = _run_trace(cfg, params)
+    assert [f["tokens"] for f in a.finished] == \
+           [f["tokens"] for f in b.finished]
+    assert [r.cycles for r in a.step_log] == [r.cycles for r in b.step_log]
+    assert sa == sb                          # frozen dataclass equality
+
+
+def test_checkpoint_restore_resumes_bit_identical():
+    cfg, params = _setup()
+    ref, _ = _run_trace(cfg, params)
+
+    eng = ServeEngine(cfg, params, cache_len=32, max_slots=2, eos_id=0)
+    for r in _requests(cfg, 4, gap_s=2e-5, seed=3):
+        eng.submit(r)
+    for _ in range(5):
+        eng.step()
+    snap = eng.checkpoint()
+
+    fresh = ServeEngine(cfg, params, cache_len=32, max_slots=2, eos_id=0)
+    fresh.restore(snap)
+    while fresh.queue or fresh._active_slot_ids():
+        fresh.step()
+    assert [f["tokens"] for f in fresh.finished] == \
+           [f["tokens"] for f in ref.finished]
+    assert ([r.cycles for r in fresh.step_log]
+            == [r.cycles for r in ref.step_log[5:]])
+    assert fresh.stats() == ref.stats()
+
+
+def test_restore_rejects_mismatched_config():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, cache_len=32, eos_id=0)
+    eng.submit(Request(rid=0, tokens=(3, 4, 5), max_new=2))
+    snap = eng.checkpoint()
+    other = ServeEngine(cfg, params, cache_len=64, eos_id=0)
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore(snap)
+
+
+# --------------------------------------------------------------------------
+# typed records
+# --------------------------------------------------------------------------
+def test_request_record_round_trip():
+    r = Request(rid=7, tokens=(3, 9, 4), max_new=5, arrival_s=0.25)
+    back = Request.from_record(json.loads(json.dumps(r.to_record())))
+    assert back == r
+
+
+def test_step_result_and_stats_record_round_trips():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, cache_len=32, eos_id=0)
+    for r in _requests(cfg, 2):
+        eng.submit(r)
+    stats = eng.run()
+    for res in eng.step_log:
+        back = StepResult.from_record(json.loads(json.dumps(
+            res.to_record())))
+        assert back == res
+    back = EngineStats.from_record(json.loads(json.dumps(
+        stats.to_record())))
+    assert back == stats
+    with pytest.raises(ValueError, match="unknown step kind"):
+        StepResult(step=0, kind="bogus", cycles=1, sim_time_s=0.0,
+                   active=0, admitted=(), emitted=(), finished=())

@@ -29,6 +29,7 @@ from repro.core.sweep import (
     grid_configs,
     interference_lane_metrics,
     interference_lane_metrics_batch,
+    step_lane_metrics,
     segment_lane_hit_counts,
     segment_lane_hit_rates,
     segment_sweep_hit_rates,
@@ -348,3 +349,102 @@ def test_dbb_stream_early_exit_parity_and_host_cycles():
                                   np.asarray(fast.latencies))
     assert int(ref.total_cycles) == int(fast.total_cycles)
     assert fast.host_cycles < ref.host_cycles / 3
+
+
+# --------------------------------------------------------------------------
+# step_lane_metrics: the serving engine's step-latency entry point
+# --------------------------------------------------------------------------
+def test_step_lane_metrics_cold_is_interference_lane():
+    segs = traces.default_dbb_window(max_bursts=512)
+    from repro.core.dram import DRAMConfig
+
+    dram = DRAMConfig()
+    assert (step_lane_metrics(segs, llc=LLC, dram=dram)
+            == interference_lane_metrics(segs, llc=LLC, dram=dram,
+                                         mix=MixConfig()))
+
+
+def test_step_lane_metrics_marginal_matches_warmed_pipeline():
+    """The marginal claim, checked against an independent engine: the
+    FAME-1 per-access pipeline run on the expanded prefix+step trace
+    minus the same pipeline on the prefix alone."""
+    from repro.core.dram import DRAMConfig
+
+    dram = DRAMConfig()
+    prefix = [traces.Segment(0, 32, 64, "w"),
+              traces.Segment(1 << 20, 32, 48, "kv0")]
+    step = [traces.Segment(0, 32, 64, "w"),
+            traces.Segment(1 << 21, 32, 32, "kv1")]
+    m = step_lane_metrics(step, llc=LLC, dram=dram, warm_prefix=prefix)
+    full = simulate_dbb_stream(traces.expand(prefix + step), llc=LLC,
+                               dram=dram)
+    warm = simulate_dbb_stream(traces.expand(prefix), llc=LLC, dram=dram)
+    assert m.total_cycles == int(full.total_cycles) - int(warm.total_cycles)
+    assert m.accesses == sum(s.count for s in step)
+
+
+def test_step_lane_metrics_steady_state_occupancy_effect():
+    """A periodic working set that fits the LLC re-hits fully at steady
+    state; adding a co-resident stream past capacity breaks the cyclic
+    re-reference pattern (the serving-side Fig. 6 story)."""
+    from repro.core.dram import DRAMConfig
+
+    dram = DRAMConfig()
+    fits = [traces.Segment(0, 32, 64, "w")]              # 2 KiB < 4 KiB LLC
+    m1 = step_lane_metrics(fits, llc=LLC, dram=dram, warm_prefix=fits)
+    assert m1.hit_rate == 1.0
+    over = fits + [traces.Segment(1 << 20, 32, 96, "kv0")]   # 5 KiB > LLC
+    m2 = step_lane_metrics(over, llc=LLC, dram=dram, warm_prefix=over)
+    assert m2.hit_rate < m1.hit_rate
+    assert m2.total_cycles > m1.total_cycles
+
+
+def test_step_lane_metrics_marginal_satisfies_closed_form():
+    """The counter-wise subtraction preserves the closed-form latency
+    identity (it is linear in the counters) — the same invariant the
+    campaign journal enforces on fresh records."""
+    from repro.core.dram import DRAMConfig
+    from repro.core.socsim import check_segment_totals
+
+    dram = DRAMConfig()
+    trace = traces.default_dbb_window(max_bursts=768)
+    m = step_lane_metrics(trace, llc=LLC, dram=dram, warm_prefix=trace,
+                          mix=MixConfig(2, "llc"))
+    check_segment_totals(accesses=m.accesses, llc_hits=m.llc_hits,
+                         dram_row_hits=m.dram_row_hits,
+                         total_cycles=m.total_cycles, dram=dram,
+                         t_llc_hit=m.t_llc_hit)
+
+
+def test_deprecated_wrappers_attribute_warning_to_caller():
+    """The one-release wrappers pass stacklevel=2, so the deprecation
+    points at the calling file, not at sweep.py internals."""
+    addrs = _window(128)
+    with pytest.warns(DeprecationWarning) as rec:
+        batched_hits(addrs, [LLC])
+    assert any(w.filename == __file__ for w in rec)
+    with pytest.warns(DeprecationWarning) as rec:
+        batched_hit_rates(addrs, [LLC])
+    assert any(w.filename == __file__ for w in rec)
+
+
+def test_socsim_positional_configs_deprecated():
+    """socsim entry points accept configs keyword-only; positional use
+    warns for one release and double/missing configs raise."""
+    from repro.core.dram import DRAMConfig
+    from repro.core.socsim import simulate_dbb_segments
+
+    segs = traces.default_dbb_window(max_bursts=128)
+    addrs = traces.expand(segs)
+    ref_seg = simulate_dbb_segments(segs, llc=LLC)
+    with pytest.warns(DeprecationWarning, match="positional"):
+        legacy = simulate_dbb_segments(segs, LLC)
+    assert legacy.total_cycles == ref_seg.total_cycles
+    ref_str = simulate_dbb_stream(addrs, llc=LLC)
+    with pytest.warns(DeprecationWarning, match="positional"):
+        legacy = simulate_dbb_stream(addrs, LLC, DRAMConfig())
+    assert int(legacy.total_cycles) == int(ref_str.total_cycles)
+    with pytest.raises(TypeError, match="missing required keyword"):
+        simulate_dbb_segments(segs)
+    with pytest.raises(TypeError, match="both positionally"):
+        simulate_dbb_segments(segs, LLC, llc=LLC)
