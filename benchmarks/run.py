@@ -2,8 +2,9 @@
 
 Prints ``name,value,note`` CSV.  ``python -m benchmarks.run [--only fig5]``.
 ``--smoke`` runs every suite on tiny grids (CI's benchmark job: proves
-the drivers execute end to end and emits ``BENCH_sweep.json`` and
-``BENCH_campaign.json`` without burning minutes of runner time).
+the drivers execute end to end and emits the ``BENCH_*.json`` artifacts
+— sweep, campaign, serve, npu — without burning minutes of runner
+time).
 """
 from __future__ import annotations
 
@@ -55,6 +56,7 @@ def main() -> None:
             ("bench_json", "BENCH_SWEEP_JSON", "BENCH_sweep.json"),
             ("campaign_json", "BENCH_CAMPAIGN_JSON", "BENCH_campaign.json"),
             ("serve_json", "BENCH_SERVE_JSON", "BENCH_serve.json"),
+            ("npu_json", "BENCH_NPU_JSON", "BENCH_npu.json"),
         )
         for key, env, default in contracts:
             path = os.environ.get(env, default)

@@ -41,5 +41,6 @@ from repro.campaign.spec import (
     MixSpec,
     ModelSpec,
     example_spec,
+    mixed_backend_spec,
 )
 from repro.core.sweep import LaneMetrics, MixConfig, SweepGrid

@@ -31,6 +31,17 @@ SPEC_VERSION = 1
 _WSS_CHOICES = ("l1", "llc", "dram")
 
 
+_BACKENDS = ("nvdla", "npu")
+# trace sources per backend: NVDLA replays the fixed-function conv
+# pipeline's YOLOv3 streams; the NPU backend compiles any model-zoo
+# GEMM workload (repro.core.npu.WORKLOADS)
+_BACKEND_MODELS = {
+    "nvdla": ("yolov3",),
+    "npu": ("yolov3", "transformer_decode", "mamba2_decode",
+            "whisper_encoder"),
+}
+
+
 @functools.lru_cache(maxsize=8)
 def _model_trace(window_bursts, chunk_bursts, layer_index):
     from repro.core import traces
@@ -40,6 +51,15 @@ def _model_trace(window_bursts, chunk_bursts, layer_index):
     return traces.default_dbb_window(max_bursts=window_bursts,
                                      chunk_bursts=chunk_bursts,
                                      layer_index=layer_index)
+
+
+@functools.lru_cache(maxsize=8)
+def _npu_trace(name, window_bursts, chunk_bursts, rows, cols):
+    from repro.core import npu
+
+    cfg = npu.NPUConfig(rows=rows, cols=cols)
+    return npu.npu_chunks(npu.workload(name), cfg, chunk_bursts,
+                          max_bursts=window_bursts)
 
 
 def canonical_json(obj) -> str:
@@ -54,31 +74,78 @@ def content_hash(obj) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class ModelSpec:
-    """One DBB trace source.  ``window_bursts=None`` replays the whole
-    network trace; an integer clips an arbiter-interleaved window of
-    ``layer_index``'s streams (see ``repro.core.traces``)."""
+    """One DBB trace source on one accelerator backend.
+
+    ``backend="nvdla"`` (the default) replays the fixed-function conv
+    pipeline's YOLOv3 streams: ``window_bursts=None`` replays the whole
+    network trace, an integer clips an arbiter-interleaved window of
+    ``layer_index``'s streams (see ``repro.core.traces``).
+    ``backend="npu"`` compiles the named model-zoo GEMM workload on a
+    ``npu_rows x npu_cols`` weight-stationary systolic array
+    (``repro.core.npu``) and windows its interleaved DBB stream the
+    same way — both backends are just segment sources to the campaign.
+
+    Axis fields hash only where they carry physics: the backend fields
+    are dropped from ``to_dict`` at their NVDLA defaults (so every
+    pre-backend ``point_id`` is unchanged) and ``layer_index`` is
+    dropped for NPU points (the NPU has no NVDLA layer windows); to
+    keep the hash faithful, a field that would be dropped must sit at
+    its default — validated below."""
     name: str = "yolov3"
     window_bursts: int | None = 4096
     chunk_bursts: int = 16
     layer_index: int = 40
+    backend: str = "nvdla"
+    npu_rows: int = 16
+    npu_cols: int = 16
 
     def __post_init__(self):
-        if self.name != "yolov3":
-            raise ValueError(f"unknown model {self.name!r}; the campaign "
-                             "trace sources are: 'yolov3'")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; campaign "
+                             f"backends are: {_BACKENDS}")
+        known = _BACKEND_MODELS[self.backend]
+        if self.name not in known:
+            raise ValueError(f"unknown model {self.name!r}; the "
+                             f"{self.backend!r} trace sources are: {known}")
         if self.window_bursts is not None and self.window_bursts <= 0:
             raise ValueError("window_bursts must be positive or None "
                              f"(whole frame), got {self.window_bursts}")
+        if self.backend == "nvdla":
+            if (self.npu_rows, self.npu_cols) != (16, 16):
+                raise ValueError(
+                    "npu_rows/npu_cols only apply to backend='npu' "
+                    "(they are excluded from NVDLA point hashes, so a "
+                    "non-default value would be silently ignored)")
+        else:
+            if self.npu_rows <= 0 or self.npu_cols <= 0:
+                raise ValueError(f"NPU grid must be positive, got "
+                                 f"{self.npu_rows}x{self.npu_cols}")
+            if self.layer_index != 40:
+                raise ValueError(
+                    "layer_index only applies to backend='nvdla' (it is "
+                    "excluded from NPU point hashes, so a non-default "
+                    "value would be silently ignored)")
 
     def trace(self):
         # memoized: the window is a pure function of the (frozen) spec,
         # and the executor asks for it once per lane shard — callers
         # must treat the returned segment list as read-only
+        if self.backend == "npu":
+            return _npu_trace(self.name, self.window_bursts,
+                              self.chunk_bursts, self.npu_rows,
+                              self.npu_cols)
         return _model_trace(self.window_bursts, self.chunk_bursts,
                             self.layer_index)
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.backend == "nvdla":
+            # pre-backend hash compatibility: NVDLA dicts are exactly
+            # what they were before the backend axis existed
+            del d["backend"], d["npu_rows"], d["npu_cols"]
+        else:
+            del d["layer_index"]
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,3 +334,24 @@ def example_spec(points: int = 8, *, window_bursts: int = 512,
         name=name,
         models=(ModelSpec(window_bursts=window_bursts),),
         geometries=geoms, mixes=mixes)
+
+
+def mixed_backend_spec(points: int = 8, *, window_bursts: int = 512,
+                       name: str = "mixed-backends") -> CampaignSpec:
+    """An NVDLA + NPU head-to-head campaign for smoke tests and CI:
+    the same windowed YOLOv3 frame traced by both backends across a
+    same-``sets`` geometry family, so every guardrail (including
+    monotone-ways, which groups by model) runs per backend."""
+    if points % 2 or not 0 < points <= 16:
+        raise ValueError(f"mixed spec needs an even 2..16 points, "
+                         f"got {points}")
+    sets = 64
+    geoms = tuple(GeometrySpec(size_kib=sets * (1 << i) * 64 / 1024,
+                               block=64, ways=1 << i)
+                  for i in range(points // 2))
+    return CampaignSpec(
+        name=name,
+        models=(ModelSpec(window_bursts=window_bursts),
+                ModelSpec(window_bursts=window_bursts, backend="npu",
+                          npu_rows=8, npu_cols=8)),
+        geometries=geoms)

@@ -6,6 +6,9 @@ Subsystems (see DESIGN.md section 2 for the TPU/JAX adaptation map):
 * ``runtime``      — command-stream compiler (accel/CPU split, tiling);
 * ``quant``        — int8 calibration for the accelerated path;
 * ``accelerator``  — NVDLA nv_large timing model behind the shared LLC;
+* ``npu``          — second backend: weight-stationary systolic GEMM
+                     array compiling model-zoo workloads to the same
+                     DBB segments (docs/npu.md);
 * ``cache``        — exact set-associative LLC simulator (runtime-config)
                      with a run-length-compressed segment engine;
 * ``traces``       — compressed (base, stride, count) DBB trace

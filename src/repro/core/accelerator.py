@@ -187,19 +187,21 @@ def _fold_op_stream_rates(per_op, per_segment_hits
 
 
 def op_stream_hit_rates_grid(stream: CommandStream,
-                             llc_configs: list[LLCConfig]
+                             llc_configs: list[LLCConfig],
+                             max_ops: int | None = None
                              ) -> list[list[tuple[float, float, float]]]:
     """``op_stream_hit_rates`` for a whole geometry grid at once: the
     full-network trace replays through the bucketed vmapped segment-lane
     engine (``repro.core.sweep.segment_lane_hit_counts``), so an N-point
     simulated Fig. 5 sweep costs a handful of compiled lane programs
-    instead of N serial whole-frame passes.  Returns one per-op rate
-    list per config, exactly what each ``accel_time_s(hit_rates=...)``
-    call needs."""
+    instead of N serial whole-frame passes.  ``max_ops`` truncates the
+    stream like the pointwise function's parameter (prefix replay —
+    smoke-scale grids).  Returns one per-op rate list per config,
+    exactly what each ``accel_time_s(hit_rates=...)`` call needs."""
     from repro.core import traces
     from repro.core.sweep import segment_lane_hit_counts
 
-    per_op = traces.network_op_segments(stream)
+    per_op = traces.network_op_segments(stream, max_ops)
     flat = [s for segs in per_op for s in segs]
     counts = segment_lane_hit_counts(flat, llc_configs)   # (n_cfg, S)
     return [_fold_op_stream_rates(per_op, counts[g])

@@ -333,3 +333,97 @@ def test_crash_resume_bit_identical_property():
                 assert canon(res.manifest) == baseline
 
         prop()
+
+
+# --------------------------------------------------------------------------
+# cross-backend campaigns: NVDLA + NPU points in one spec
+# --------------------------------------------------------------------------
+def test_backend_axis_preserves_pre_backend_hashes():
+    """Adding the backend axis must not invalidate existing journals:
+    an NVDLA ModelSpec's dict (and therefore every point_id) is exactly
+    what it was before backend/npu_rows/npu_cols existed."""
+    d = ModelSpec(window_bursts=256).to_dict()
+    assert d == {"name": "yolov3", "window_bursts": 256,
+                 "chunk_bursts": 16, "layer_index": 40}
+    assert ModelSpec(**d) == ModelSpec(window_bursts=256)
+    # the axis fields do carry physics for NPU points
+    nv = ModelSpec(window_bursts=256)
+    np8 = ModelSpec(window_bursts=256, backend="npu", npu_rows=8,
+                    npu_cols=8)
+    np16 = ModelSpec(window_bursts=256, backend="npu")
+    from repro.campaign.spec import CampaignPoint, DRAMSpec
+
+    ids = {CampaignPoint(m, GeometrySpec(8, ways=2), MixSpec(),
+                         DRAMSpec()).point_id for m in (nv, np8, np16)}
+    assert len(ids) == 3
+
+
+def test_backend_axis_validation():
+    with pytest.raises(ValueError, match="backend"):
+        ModelSpec(backend="tpu")
+    with pytest.raises(ValueError, match="trace sources"):
+        ModelSpec(name="transformer_decode")          # nvdla can't GEMM
+    with pytest.raises(ValueError, match="layer_index"):
+        ModelSpec(backend="npu", layer_index=7)       # dropped from hash
+    with pytest.raises(ValueError, match="npu_rows"):
+        ModelSpec(npu_rows=8)                         # dropped from hash
+    from repro.campaign.spec import mixed_backend_spec
+
+    with pytest.raises(ValueError, match="even"):
+        mixed_backend_spec(points=3)
+
+
+def test_npu_points_trace_through_executor(tmp_path):
+    """A pure-NPU campaign runs the unchanged executor + guardrails and
+    its journaled counters replay the NPU window exactly."""
+    from repro.campaign.spec import mixed_backend_spec
+    from repro.core import npu
+    from repro.core.cache import simulate_segments
+
+    spec = mixed_backend_spec(4, window_bursts=128)
+    res = run_campaign(spec, str(tmp_path))
+    assert res.completed == 4 and not res.failed
+    npu_points = [p for p in res.manifest["points"]
+                  if p["params"]["model"].get("backend") == "npu"]
+    assert len(npu_points) == 2
+    window = npu.npu_chunks(npu.workload("yolov3"),
+                            npu.NPUConfig(rows=8, cols=8),
+                            chunk_bursts=16, max_bursts=128)
+    for p in npu_points:
+        geo = p["params"]["geometry"]
+        llc = GeometrySpec(**geo).llc()
+        ref = simulate_segments(window, llc)
+        assert p["result"]["nvdla_accesses"] == ref.accesses
+        assert p["result"]["nvdla_hits"] == ref.hits
+
+
+def test_mixed_backend_campaign_crash_resume_bit_identical(tmp_path):
+    """The satellite acceptance case: an 8-point NVDLA+NPU campaign
+    journals, crashes mid-run on each backend's half, and resumes to a
+    manifest bit-identical to an uninterrupted run."""
+    from repro.campaign.spec import mixed_backend_spec
+
+    spec = mixed_backend_spec(8, window_bursts=256)
+    backends = [p.model.backend for p in spec.expand()]
+    assert sorted(set(backends)) == ["npu", "nvdla"]
+    clean = run_campaign(spec, str(tmp_path / "clean"))
+    assert clean.completed == 8 and not clean.failed
+    plan = plan_from_indices(spec, [
+        {"point": backends.index("nvdla"), "kind": "crash"},
+        {"point": backends.index("npu") + 1, "kind": "crash"},
+    ])
+    res, runs = _run_until_done(spec, str(tmp_path / "faulted"), plan,
+                                RetryPolicy(max_retries=1, backoff_s=0))
+    assert runs >= 3 and not res.failed
+    assert canon(res.manifest) == canon(clean.manifest)
+
+
+def test_mixed_backend_batched_matches_sequential(tmp_path):
+    """Batched (vmapped-lane) execution shards NVDLA and NPU points
+    into separate lane programs but must journal identical numbers."""
+    from repro.campaign.spec import mixed_backend_spec
+
+    spec = mixed_backend_spec(4, window_bursts=128)
+    seq = run_campaign(spec, str(tmp_path / "seq"))
+    bat = run_campaign(spec, str(tmp_path / "bat"), batch_points=4)
+    assert canon(seq.manifest) == canon(bat.manifest)

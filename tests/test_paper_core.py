@@ -192,6 +192,28 @@ def test_sim_driven_op_cycles_matches_paper_baseline():
     assert 0.35 < sum(weighted) / len(weighted) < 0.9
 
 
+def test_op_stream_hit_rates_grid_matches_pointwise():
+    """The vmapped grid path (the fig5 simulated sweep, now also the
+    NPU comparison's substrate) must reproduce the serial pointwise
+    rates exactly for every geometry — same fold, same numbers."""
+    from repro.core.accelerator import (op_stream_hit_rates,
+                                        op_stream_hit_rates_grid)
+
+    stream = compile_network()
+    llcs = [LLCConfig(size_bytes=64 * 1024, ways=4, block_bytes=64),
+            LLCConfig(size_bytes=256 * 1024, ways=8, block_bytes=64),
+            LLCConfig(size_bytes=128 * 1024, ways=2, block_bytes=32)]
+    max_ops = 6
+    grid = op_stream_hit_rates_grid(stream, llcs, max_ops=max_ops)
+    assert len(grid) == len(llcs)
+    for llc, rates in zip(llcs, grid):
+        mem = MemSystemConfig(llc=llc)
+        point = op_stream_hit_rates(stream, mem, max_ops=max_ops)
+        assert len(rates) == len(point) == max_ops
+        for a, b in zip(rates, point):
+            assert a == b, f"grid diverged from pointwise at {llc}"
+
+
 def test_accel_time_s_mode_validation():
     from repro.core.accelerator import AccelConfig, accel_time_s
 
