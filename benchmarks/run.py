@@ -15,13 +15,14 @@ import sys
 import time
 
 from benchmarks import campaign_bench, fig4_platforms, fig5_llc
-from benchmarks import fig6_interference, kernel_bench, roofline
-from benchmarks import serve_bench, socsim_bench
+from benchmarks import fig6_interference, fig6_tail, kernel_bench
+from benchmarks import roofline, serve_bench, socsim_bench
 
 SUITES = {
     "fig4": fig4_platforms.run,
     "fig5": fig5_llc.run,
     "fig6": fig6_interference.run,
+    "fig6_tail": fig6_tail.run,
     "kernels": kernel_bench.run,
     "roofline": roofline.run,
     "socsim": socsim_bench.run,
@@ -57,6 +58,7 @@ def main() -> None:
             ("campaign_json", "BENCH_CAMPAIGN_JSON", "BENCH_campaign.json"),
             ("serve_json", "BENCH_SERVE_JSON", "BENCH_serve.json"),
             ("npu_json", "BENCH_NPU_JSON", "BENCH_npu.json"),
+            ("noc_json", "BENCH_NOC_JSON", "BENCH_noc.json"),
         )
         for key, env, default in contracts:
             path = os.environ.get(env, default)

@@ -263,9 +263,10 @@ def _segment_closed_form(state, b_first, n_blocks, a_interior, a_last,
 # segment-lane engine: geometry as *traced* operands
 # --------------------------------------------------------------------------
 def segment_lane_scan(bases, strides, counts, r_needed, cold,
-                      sets, ways, block_bytes,
+                      sets, ways, block_bytes, way_sels=None,
                       *, max_sets: int, max_ways: int, r_pad: int,
-                      collect: bool = False, suffix: str = "full"):
+                      collect: bool = False, suffix: str = "full",
+                      return_state: bool = False):
     """One sweep lane's exact segment replay with *runtime* geometry.
 
     ``bases/strides/counts`` are (S,) int32 segment streams (count == 0
@@ -326,6 +327,27 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
     * ``"none"`` — every segment retires entirely in the round scan
       (no cold segments and n_blocks <= ways*sets everywhere, so
       n_suf == 0): the suffix block is dropped from the program.
+
+    ``way_sels`` (optional, (S,) int32) adds LLC **way-masking
+    partitioning** (Intel CAT semantics, FireSim's LLC model knob): a
+    per-segment bitmask of the ways the segment's master may *allocate*
+    into on a miss.  Hits are unrestricted — a line is served from
+    whichever way holds it, and the touch updates that way's recency —
+    only victim selection is confined to the mask, so disjoint masks
+    give each master a private partition of every set.  A zero mask
+    means "unpartitioned" (the full-mask behavior, bit-exactly — the
+    sentinel lets one vmapped batch mix masked and unmasked lanes).
+    Masked segments (mask != 0) retire entirely in the round scan —
+    the closed-form suffix assumes unrestricted LRU victim cycling —
+    so the caller's plan must give them ``ceil(n_blocks / sets)``
+    rounds and their ``cold`` flag is ignored.  Callers guarantee
+    ``mask & ((1 << ways) - 1) != 0`` (an empty partition cannot
+    allocate anywhere).
+
+    ``return_state`` (static) additionally returns the final
+    ``(tags, ts)`` state, (max_ways, max_sets) each — the partition
+    invariant tests decode it to prove masked ways never hold the
+    victim's lines.
     """
     s_idx = jnp.arange(max_sets, dtype=jnp.int32)
     q_idx = jnp.arange(max_ways, dtype=jnp.int32)
@@ -334,15 +356,30 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
     imax = jnp.iinfo(jnp.int32).max
     bb = block_bytes
 
+    masked = way_sels is not None
+
     def per_segment(carry, meta):
         tags, ts, counter = carry          # (max_ways, max_sets) x2, scalar
-        base, stride, count, rounds, is_cold = meta
+        if masked:
+            base, stride, count, rounds, is_cold, wsel = meta
+            # allocation mask: mask bits limited to real ways; the zero
+            # sentinel means unpartitioned (alloc anywhere real)
+            alloc = way_mask & ((wsel == 0) | (((wsel >> q_idx) & 1) != 0))
+        else:
+            base, stride, count, rounds, is_cold = meta
+            wsel = jnp.int32(0)
+            alloc = way_mask
         live = count > 0
         b_first = base // bb
         b_last = (base + (count - 1) * stride) // bb
         n_blocks = jnp.where(live, b_last - b_first + 1, 0)
         full = ways * sets
         n_pre = jnp.where(is_cold, 0, jnp.minimum(n_blocks, full))
+        if masked:
+            # a partitioned segment cannot use the suffix closed form
+            # (victims cycle within its mask, not all ways): the whole
+            # segment goes through the round scan
+            n_pre = jnp.where(wsel != 0, n_blocks, n_pre)
         off = jnp.where(set_mask, (s_idx - b_first) % sets, 0)
 
         def round_k(k, inner):
@@ -361,7 +398,7 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
             # without a gather — XLA:CPU gathers cost ~100ns/element,
             # elementwise ops ~1ns)
             key = jnp.where(tags == t[None, :], -1,
-                            jnp.where(way_mask[:, None], ts, imax))
+                            jnp.where(alloc[:, None], ts, imax))
             kmin = jnp.min(key, axis=0)
             hit = kmin == -1
             is_min = key == kmin[None, :]
@@ -440,13 +477,18 @@ def segment_lane_scan(bases, strides, counts, r_needed, cold,
     init = (jnp.full((max_ways, max_sets), -1, jnp.int32),
             jnp.zeros((max_ways, max_sets), jnp.int32),
             jnp.int32(0))
-    _, (per_seg_hits, miss_bits) = jax.lax.scan(
-        per_segment, init,
-        (bases, strides, counts, r_needed,
-         jnp.asarray(cold).astype(jnp.bool_)))
+    xs = [bases, strides, counts, r_needed,
+          jnp.asarray(cold).astype(jnp.bool_)]
+    if masked:
+        xs.append(jnp.asarray(way_sels).astype(jnp.int32))
+    (tags_f, ts_f, _), (per_seg_hits, miss_bits) = jax.lax.scan(
+        per_segment, init, tuple(xs))
+    out = (per_seg_hits,)
     if collect:
-        return per_seg_hits, miss_bits
-    return per_seg_hits
+        out += (miss_bits,)
+    if return_state:
+        out += ((tags_f, ts_f),)
+    return out if len(out) > 1 else out[0]
 
 
 @dataclasses.dataclass

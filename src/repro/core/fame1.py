@@ -47,6 +47,70 @@ def _select_tree(pred, new, old):
         new, old)
 
 
+def chunked_scan(step_fn, init_carry, xs, *, cont_fn,
+                 chunk_len: int = 64, pow2_bucket: bool = True):
+    """Token-bundle execution of a per-target-cycle ``lax.scan``: replay
+    ``xs`` in ``chunk_len``-cycle bundles under a ``lax.while_loop``
+    that stops as soon as ``cont_fn(carry)`` goes False — the
+    ``FAME1Pipeline.run`` early-exit pattern, factored out so other
+    token simulators (the NoC switch farm, ``repro.core.noc``) batch k
+    target cycles per host step through one combinator.
+
+    ``step_fn(carry, x, active) -> (carry, y)`` is one target cycle; it
+    MUST be a no-op on ``active=False`` cycles (bundle padding), which
+    is exactly the FAME-1 clock-gate contract — and what makes the
+    result provably invariant to ``chunk_len``, including bundle sizes
+    that do not divide the cycle count (tests/test_noc.py).
+
+    ``xs`` leaves are (H, ...); the schedule is zero-padded to a whole
+    number of bundles (``pow2_bucket`` rounds the bundle count to a
+    power of two so similar-length schedules share a compiled program).
+    Returns ``(carry, ys, bundles_run)`` where ``ys`` leaves are
+    (n_bundles * chunk_len, ...) — entries past the executed bundles
+    (or on inactive padding cycles) hold zeros, so per-cycle outputs
+    must carry their own validity bit.  Trace under ``jit``: the bundle
+    count specializes on the (static) schedule length.
+    """
+    if chunk_len < 1:
+        raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+    xs = jax.tree.map(jnp.asarray, xs)
+    h_total = jax.tree.leaves(xs)[0].shape[0]
+    n_chunks = max(1, -(-h_total // chunk_len))
+    if pow2_bucket:
+        n_chunks = 1 << (n_chunks - 1).bit_length()
+    pad = n_chunks * chunk_len - h_total
+    xs_c = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]
+        ).reshape((n_chunks, chunk_len) + a.shape[1:]), xs)
+    act_c = (jnp.arange(n_chunks * chunk_len)
+             < h_total).reshape(n_chunks, chunk_len)
+    y_struct = jax.eval_shape(
+        lambda c, x: step_fn(c, x, jnp.bool_(True))[1],
+        init_carry, jax.tree.map(lambda a: a[0, 0], xs_c))
+    ys_init = jax.tree.map(
+        lambda s: jnp.zeros((n_chunks * chunk_len,) + s.shape, s.dtype),
+        y_struct)
+
+    def bundle(loop):
+        ci, carry, ys_buf = loop
+        carry, ys = jax.lax.scan(
+            lambda c, inp: step_fn(c, inp[0], inp[1]), carry,
+            (jax.tree.map(lambda a: a[ci], xs_c), act_c[ci]))
+        ys_buf = jax.tree.map(
+            lambda b, y: jax.lax.dynamic_update_slice_in_dim(
+                b, y.astype(b.dtype), ci * chunk_len, 0), ys_buf, ys)
+        return ci + 1, carry, ys_buf
+
+    def cond(loop):
+        ci, carry, _ = loop
+        return (ci < n_chunks) & cont_fn(carry)
+
+    ci, carry, ys = jax.lax.while_loop(
+        cond, bundle, (jnp.int32(0), init_carry, ys_init))
+    return carry, ys, ci
+
+
 def fame1_wrap(step_fn: Callable):
     """f(state, x) -> (state, y)  ==>  h((state,), (x, valid)) which holds
     state and emits an invalid token when `valid` is False."""

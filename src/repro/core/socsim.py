@@ -108,18 +108,26 @@ def _mem_pipeline(llc_cfg: LLCConfig, dram_cfg: DRAMConfig,
                           dram_component(llc_cfg, dram_cfg)])
 
 
+def _positional_config_warning(fn_name: str) -> str:
+    return (f"positional configs to {fn_name}() are deprecated; pass "
+            "llc=/dram= keyword-only (the shared convention across the "
+            "sweep/pipeline APIs)")
+
+
 def _legacy_configs(fn_name: str, legacy: tuple, llc, dram):
     """One-release escape hatch: positional (llc, dram) still works but
-    warns.  Returns the resolved (llc, dram); raises ``TypeError`` on a
-    config passed both ways or a missing ``llc``."""
+    warns.  The ``DeprecationWarning`` itself is emitted by the *public*
+    function (``warnings.warn(..., stacklevel=2)``, the repo-wide
+    convention — every deprecation attributes to the caller's line, and
+    tests/test_deprecations.py asserts the attribution for every site).
+    This helper used to warn on the public function's behalf, which
+    forced a one-off ``stacklevel=3`` to skip its own frame.  Returns
+    the resolved (llc, dram); raises ``TypeError`` on a config passed
+    both ways or a missing ``llc``."""
     if legacy:
         if len(legacy) > 2:
             raise TypeError(f"{fn_name}() takes at most 2 positional "
                             f"configs, got {len(legacy)}")
-        warnings.warn(
-            f"positional configs to {fn_name}() are deprecated; pass "
-            "llc=/dram= keyword-only (the shared convention across the "
-            "sweep/pipeline APIs)", DeprecationWarning, stacklevel=3)
         if llc is not None or (dram is not None and len(legacy) > 1):
             raise TypeError(f"{fn_name}() got a config both positionally "
                             "and by keyword")
@@ -147,6 +155,9 @@ def simulate_dbb_stream(byte_addrs, *legacy, llc: LLCConfig | None = None,
     """
     from repro.utils.env import x64_enabled
 
+    if legacy:
+        warnings.warn(_positional_config_warning("simulate_dbb_stream"),
+                      DeprecationWarning, stacklevel=2)
     llc, dram = _legacy_configs("simulate_dbb_stream", legacy, llc, dram)
     dram = dram or DRAMConfig()
     addrs = as_address_array(byte_addrs, what="DBB byte address")
@@ -296,6 +307,9 @@ def simulate_dbb_segments(segments, *legacy, llc: LLCConfig | None = None,
     from repro.core.cache import simulate_segments
     from repro.core.dram import segment_row_hits
 
+    if legacy:
+        warnings.warn(_positional_config_warning("simulate_dbb_segments"),
+                      DeprecationWarning, stacklevel=2)
     llc, dram = _legacy_configs("simulate_dbb_segments", legacy, llc, dram)
     dram = dram or DRAMConfig()
     bb = llc.block_bytes

@@ -30,11 +30,19 @@ Public API:
                             lane (``to_record``/``from_record`` for
                             JSON journaling);
 * ``SweepGrid``           — frozen typed result of the figure sweeps;
-* ``interference_lane_metrics``       — one lane -> ``LaneMetrics``;
+* ``interference_lane_metrics``       — one lane -> ``LaneMetrics``,
+                            optionally LLC way-partitioned
+                            (``way_mask=``);
 * ``interference_lane_metrics_batch`` — many lanes as vmapped lane
                             programs, optionally sharded over a
                             ``jax.sharding`` mesh (the campaign
-                            executor's data-parallel path);
+                            executor's data-parallel path) and
+                            optionally per-lane way-partitioned
+                            (``way_masks=``);
+* ``partition_way_sels``  — victim/co-runner allocation masks for an
+                            Intel-CAT-style two-class way partition;
+* ``lane_request_latencies`` — per-victim-chunk memory latencies (the
+                            farm's memory-side tail distribution);
 * ``sweep_llc``           — Fig. 5 grid: closed-form speedups + exact
                             segment-lane hit rates, windowed or full
                             frame;
@@ -282,16 +290,35 @@ def segment_sweep_hit_rates(segments, configs: list[LLCConfig]
 @functools.lru_cache(maxsize=32)
 def _lane_engine(max_sets: int, max_ways: int, r_pad: int,
                  per_lane_trace: bool, collect: bool = False,
-                 suffix: str = "full"):
+                 suffix: str = "full", masked: bool = False):
     from repro.core.cache import segment_lane_scan
 
+    if masked and not per_lane_trace:
+        raise ValueError("way-masked lanes need per-lane traces "
+                         "(each lane carries its own way_sels)")
     in_axes = ((0, 0, 0, 0, 0, 0, 0, 0) if per_lane_trace
                else (None, None, None, None, None, 0, 0, 0))
+    if masked:
+        in_axes = in_axes + (0,)
     return jax.jit(jax.vmap(
         functools.partial(segment_lane_scan, max_sets=max_sets,
                           max_ways=max_ways, r_pad=r_pad, collect=collect,
                           suffix=suffix),
         in_axes=in_axes))
+
+
+@functools.lru_cache(maxsize=32)
+def _single_lane_engine(max_sets: int, max_ways: int, r_pad: int,
+                        suffix: str, return_state: bool = False):
+    """One jitted (unvmapped) masked lane — the way-partitioned QoS
+    path and the per-request latency attribution both run single
+    lanes at exact geometry."""
+    from repro.core.cache import segment_lane_scan
+
+    return jax.jit(functools.partial(
+        segment_lane_scan, max_sets=max_sets, max_ways=max_ways,
+        r_pad=r_pad, collect=True, suffix=suffix,
+        return_state=return_state))
 
 
 def _lane_plan(trace: list, configs: list[LLCConfig]
@@ -731,10 +758,62 @@ def _check_row_block(llc: LLCConfig, dram) -> None:
                          "for the segment-native interference lane")
 
 
+def partition_way_sels(nv_mask, llc: LLCConfig, way_mask: int) -> np.ndarray:
+    """Per-segment allocation masks for an LLC way partition: the
+    victim (NVDLA/NPU) segments allocate only into ``way_mask``'s ways,
+    co-runner segments into the complement — Intel-CAT-style two-class
+    partitioning.  ``way_mask == (1 << ways) - 1`` (the full mask)
+    means *no* partition: both classes allocate anywhere, bit-exactly
+    the unpartitioned scan (the invariant tests/test_waymask.py pins).
+
+    Raises ``ValueError`` when the victim mask selects no real way —
+    an empty partition cannot allocate."""
+    full = (1 << llc.ways) - 1
+    vm = int(way_mask) & full
+    if vm == 0:
+        raise ValueError(
+            f"way_mask {way_mask:#x} selects none of the {llc.ways} "
+            "ways — the victim partition must hold at least one way")
+    co = full & ~vm
+    if co == 0:
+        co = full        # full victim mask == unpartitioned for everyone
+    return np.where(np.asarray(nv_mask, bool), vm, co).astype(np.int32)
+
+
+def _masked_lane_run(b, s, c, llc: LLCConfig, way_sels,
+                     *, return_state: bool = False):
+    """One way-partitioned lane through the masked segment kernel:
+    every segment carries a non-zero allocation mask, so the plan gives
+    every segment its full ``ceil(n_blocks / sets)`` rounds (no closed
+    -form suffix — the suffix assumes unrestricted victim cycling) and
+    miss runs are reconstructed with ``full_prefix=True``.  Returns
+    (per_segment_hits, miss_run_arrays[, final_state])."""
+    bb, sets, ways = llc.block_bytes, llc.sets, llc.ways
+    live = c > 0
+    last = b + np.maximum(c - 1, 0) * s
+    nb = np.where(live, last // bb - b // bb + 1, 0)
+    r_needed = (-(-nb // sets)).astype(np.int32)
+    r_pad = max(1, int(r_needed.max(initial=1)))
+    cold = np.zeros(b.shape[0], bool)
+    engine = _single_lane_engine(sets, ways, r_pad, "none",
+                                 return_state=return_state)
+    out = engine(jnp.asarray(b, jnp.int32), jnp.asarray(s, jnp.int32),
+                 jnp.asarray(c, jnp.int32), jnp.asarray(r_needed),
+                 jnp.asarray(cold), sets, ways, bb,
+                 jnp.asarray(way_sels, jnp.int32))
+    hits = np.asarray(out[0], np.int64)
+    runs = _lane_miss_runs(b, s, c, llc, cold, np.asarray(out[1]),
+                           full_prefix=True)
+    if return_state:
+        return hits, runs, jax.tree.map(np.asarray, out[2])
+    return hits, runs
+
+
 def interference_lane_metrics(nvdla_segs: list, *, llc: LLCConfig,
                               dram, mix: MixConfig,
                               chunk_bursts: int = 16,
-                              t_llc_hit: int = 20) -> LaneMetrics:
+                              t_llc_hit: int = 20,
+                              way_mask: int | None = None) -> LaneMetrics:
     """One interference lane, simulated exactly and reduced to the typed
     ``LaneMetrics`` record a campaign point journals
     (``repro.campaign``): the co-runner-interleaved compressed trace
@@ -746,11 +825,35 @@ def interference_lane_metrics(nvdla_segs: list, *, llc: LLCConfig,
     recompute the total from the counts and reject any record where
     they disagree).
 
-    ``mix.corunners=0`` (or ``mix.wss="l1"``) is the solo-NVDLA lane."""
+    ``mix.corunners=0`` (or ``mix.wss="l1"``) is the solo-NVDLA lane.
+
+    ``way_mask`` turns on LLC way partitioning (``partition_way_sels``):
+    victim segments allocate only into ``way_mask``'s ways, co-runners
+    into the complement.  The full mask is bit-exactly the
+    unpartitioned lane."""
     from repro.core.cache import simulate_segments
 
     bb = llc.block_bytes
     _check_row_block(llc, dram)
+    if way_mask is not None:
+        b, s, c, nv = corunner_meta(nvdla_segs, llc=llc, mix=mix,
+                                    chunk_bursts=chunk_bursts)
+        _check_lane_support_meta([(b, s, c)], [llc])
+        way_sels = partition_way_sels(nv, llc, way_mask)
+        hits, runs = _masked_lane_run(b, s, c, llc, way_sels)
+        n_seg = c.shape[0]
+        accesses = int(c.sum())
+        lane_hits = int(hits[:n_seg].sum())
+        if int(runs[1].sum()) != accesses - lane_hits:
+            raise RuntimeError(
+                "masked lane miss-run reconstruction disagrees with the "
+                f"kernel: {int(runs[1].sum())} missed blocks vs "
+                f"{accesses - lane_hits} misses")
+        return _lane_metrics_from_runs(
+            n_segments=n_seg, accesses=accesses, hits=lane_hits,
+            runs=runs, bb=bb, nv=nv, dram=dram, t_llc_hit=t_llc_hit,
+            nv_acc=int(c[nv].sum()),
+            nv_hits=int(hits[:n_seg][nv].sum()))
     segs, nv = corunner_segments(nvdla_segs, llc=llc, mix=mix,
                                  chunk_bursts=chunk_bursts)
     res = simulate_segments(segs, llc, per_segment=True,
@@ -762,6 +865,74 @@ def interference_lane_metrics(nvdla_segs: list, *, llc: LLCConfig,
         nv=nv, dram=dram, t_llc_hit=t_llc_hit,
         nv_acc=int(counts[nv].sum()),
         nv_hits=int(res.per_segment_hits[nv].sum()))
+
+
+def lane_request_latencies(nvdla_segs: list, *, llc: LLCConfig, dram,
+                           mix: MixConfig, chunk_bursts: int = 16,
+                           t_llc_hit: int = 20,
+                           way_mask: int | None = None
+                           ) -> tuple[np.ndarray, LaneMetrics]:
+    """Per-victim-chunk memory latencies of one interference lane — the
+    memory half of the farm's tail-latency distribution
+    (``repro.core.farm``).
+
+    The lane's closed-form latency identity is linear in per-segment
+    counters (``accesses * t_llc_hit + misses * tCAS + row_misses *
+    (tRP + tRCD)``), so it distributes exactly over segments: each
+    segment's share uses its own access/hit counts plus its row hits
+    (attributed from the lane's miss runs).  ``corunner_segments``
+    emits exactly one victim segment per ``chunk_bursts``-burst chunk,
+    so the victim rows *are* the per-chunk service latencies — returned
+    in stream order alongside the lane's ``LaneMetrics``.  The
+    per-chunk latencies provably sum to ``metrics.total_cycles`` (the
+    identity's linearity; asserted here).
+
+    ``way_mask`` partitions the LLC as in
+    ``interference_lane_metrics``."""
+    from repro.core.cache import simulate_segments
+    from repro.core.dram import segment_row_hits
+
+    bb = llc.block_bytes
+    _check_row_block(llc, dram)
+    if way_mask is not None:
+        b, s, c, nv = corunner_meta(nvdla_segs, llc=llc, mix=mix,
+                                    chunk_bursts=chunk_bursts)
+        _check_lane_support_meta([(b, s, c)], [llc])
+        way_sels = partition_way_sels(nv, llc, way_mask)
+        hits, runs = _masked_lane_run(b, s, c, llc, way_sels)
+        counts = np.asarray(c, np.int64)
+        hits = np.asarray(hits[:counts.shape[0]], np.int64)
+    else:
+        segs, nv = corunner_segments(nvdla_segs, llc=llc, mix=mix,
+                                     chunk_bursts=chunk_bursts)
+        res = simulate_segments(segs, llc, per_segment=True,
+                                collect_miss_runs=True)
+        counts = np.asarray([sg.count for sg in segs], np.int64)
+        hits = np.asarray(res.per_segment_hits, np.int64)
+        runs = res.miss_runs
+    if isinstance(runs, tuple):
+        fb, nbk, sidx = (np.asarray(a, np.int64) for a in runs)
+    else:
+        arr = np.asarray(runs, np.int64).reshape(-1, 3)
+        fb, nbk, sidx = arr[:, 0], arr[:, 1], arr[:, 2]
+    row = segment_row_hits((fb * bb, np.full(fb.shape[0], bb, np.int64),
+                            nbk), dram)
+    seg_row = np.zeros(counts.shape[0], np.int64)
+    np.add.at(seg_row, sidx, np.asarray(row.per_segment, np.int64))
+    misses = counts - hits
+    per_seg = (counts * t_llc_hit + misses * dram.t_cas_cycles
+               + (misses - seg_row) * (dram.t_rp_cycles
+                                       + dram.t_rcd_cycles))
+    metrics = _lane_metrics_from_runs(
+        n_segments=counts.shape[0], accesses=int(counts.sum()),
+        hits=int(hits.sum()), runs=(fb, nbk, sidx), bb=bb, nv=nv,
+        dram=dram, t_llc_hit=t_llc_hit, nv_acc=int(counts[nv].sum()),
+        nv_hits=int(hits[nv].sum()))
+    if int(per_seg.sum()) != metrics.total_cycles:
+        raise RuntimeError(
+            "per-segment latency attribution does not sum to the lane "
+            f"total: {int(per_seg.sum())} vs {metrics.total_cycles}")
+    return per_seg[np.asarray(nv, bool)], metrics
 
 
 def _marginal_lane_metrics(full: LaneMetrics, warm: LaneMetrics
@@ -829,7 +1000,8 @@ def step_lane_metrics(segments: list, *, llc: LLCConfig, dram,
 
 
 def _lane_miss_runs(base, stride, count, llc: LLCConfig, cold: np.ndarray,
-                    miss_bits: np.ndarray) -> tuple:
+                    miss_bits: np.ndarray, *,
+                    full_prefix: bool = False) -> tuple:
     """Reconstruct one lane's exact missed-block runs from the vmapped
     kernel's round-scan miss bits plus the analytically-known suffix
     (every block past the round-scanned prefix misses; a cold segment
@@ -841,15 +1013,23 @@ def _lane_miss_runs(base, stride, count, llc: LLCConfig, cold: np.ndarray,
 
     ``base/stride/count`` are the lane's (n_segments,) metadata arrays;
     returns ``(first_blocks, n_blocks, seg_idx)`` int64 arrays, fully
-    vectorized — no per-segment interpreter work."""
+    vectorized — no per-segment interpreter work.
+
+    ``full_prefix`` matches a way-masked lane's plan: every segment
+    retired entirely in the round scan (the kernel forces
+    n_pre == n_blocks for mask != 0 segments), so there is no analytic
+    suffix and every miss is a collected bit."""
     bb, sets, ways = llc.block_bytes, llc.sets, llc.ways
     n_seg = base.shape[0]
     live = count > 0
     b_first = base // bb
     b_last = (base + np.maximum(count - 1, 0) * stride) // bb
     nb = np.where(live, b_last - b_first + 1, 0)
-    n_pre = np.where(np.asarray(cold[:n_seg], bool), 0,
-                     np.minimum(nb, ways * sets))
+    if full_prefix:
+        n_pre = nb
+    else:
+        n_pre = np.where(np.asarray(cold[:n_seg], bool), 0,
+                         np.minimum(nb, ways * sets))
     sj, kj, cj = np.nonzero(miss_bits[:n_seg])
     ordv = ((cj.astype(np.int64) - b_first[sj]) % sets
             + kj.astype(np.int64) * sets)
@@ -913,7 +1093,8 @@ def _mesh_shard_lanes(arrays, mesh):
 def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
                                     mixes, chunk_bursts: int = 16,
                                     t_llc_hit: int = 20,
-                                    mesh=None) -> list[LaneMetrics]:
+                                    mesh=None,
+                                    way_masks=None) -> list[LaneMetrics]:
     """Many interference lanes as vmapped lane programs — the campaign
     executor's data-parallel path (``repro.campaign.executor``).
 
@@ -935,23 +1116,38 @@ def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
 
     Raises ``ValueError`` if any lane's trace falls outside the segment
     engine's support (stride > block_bytes) — callers fall back to the
-    sequential path, which expands such segments exactly."""
+    sequential path, which expands such segments exactly.
+
+    ``way_masks`` is an equal-length sequence of per-lane LLC way
+    partitions (``int`` victim masks, or ``None`` for unpartitioned
+    lanes) — masked and unmasked lanes mix freely in one compiled
+    batch via the kernel's zero-mask sentinel."""
     lanes_n = len(llcs)
     if not (len(drams) == len(mixes) == lanes_n):
         raise ValueError(
             f"llcs/drams/mixes lengths disagree: {lanes_n}/"
             f"{len(drams)}/{len(mixes)}")
+    if way_masks is not None and len(way_masks) != lanes_n:
+        raise ValueError(
+            f"way_masks length {len(way_masks)} != lanes {lanes_n}")
     if lanes_n == 0:
         return []
     chunks = nvdla_chunks(nvdla_segs, chunk_bursts)
-    lanes, nv_masks = [], []
-    for llc, dram, mix in zip(llcs, drams, mixes):
+    lanes, nv_masks, lane_sels = [], [], []
+    for i, (llc, dram, mix) in enumerate(zip(llcs, drams, mixes)):
         _check_row_block(llc, dram)
         b, s, c, nv = corunner_meta(nvdla_segs, llc=llc, mix=mix,
                                     chunk_bursts=chunk_bursts,
                                     _chunks=chunks)
         lanes.append((b, s, c))
         nv_masks.append(nv)
+        wm = way_masks[i] if way_masks is not None else None
+        lane_sels.append(None if wm is None
+                         else partition_way_sels(nv, llc, wm))
+    masked = way_masks is not None
+    if masked and mesh is not None:
+        raise ValueError("way-masked batches do not support mesh "
+                         "sharding yet — pass mesh=None")
     _check_lane_support_meta(lanes, llcs)
     out: list[LaneMetrics | None] = [None] * lanes_n
     for bucket in lane_buckets(llcs):
@@ -964,6 +1160,7 @@ def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
         strides = np.ones(shape, np.int32)
         counts = np.zeros(shape, np.int32)
         r_needed = np.zeros(shape, np.int32)
+        way_sels = np.zeros(shape, np.int32)
         suffix = "none"
         for row, ((b, s, c), cfg) in enumerate(zip(metas_b, cfgs_b)):
             k = c.shape[0]
@@ -971,6 +1168,14 @@ def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
             bb = cfg.block_bytes
             last = b + np.maximum(c - 1, 0) * s
             nb = np.where(c > 0, last // bb - b // bb + 1, 0)
+            sel = lane_sels[bucket[row]]
+            if sel is not None:
+                # way-partitioned lane: every segment retires entirely
+                # in the round scan (no analytic suffix for restricted
+                # allocation), so the plan is the full ceil(nb / sets)
+                way_sels[row, :k] = sel
+                r_needed[row, :k] = (-(-nb // cfg.sets)).astype(np.int32)
+                continue
             # per-lane tight plan: enough rounds to retire the
             # min(nb, ways*sets)-block prefix; no cold short-circuit
             # (conservative cold=False is exact either way, and skipping
@@ -991,8 +1196,12 @@ def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
                   jnp.asarray(cold), sets, ways, blocks]
         if mesh is not None:
             arrays = _mesh_shard_lanes(arrays, mesh)
+        if masked:
+            # the zero-mask sentinel keeps unpartitioned rows on the
+            # standard plan inside the same compiled program
+            arrays = arrays + [jnp.asarray(way_sels)]
         engine = _lane_engine(max_sets, max_ways, r_pad, True,
-                              collect=True, suffix=suffix)
+                              collect=True, suffix=suffix, masked=masked)
         hits_dev, miss_dev = engine(*arrays)
         hits = np.asarray(hits_dev, np.int64)
         miss_bits = np.asarray(miss_dev)
@@ -1001,7 +1210,8 @@ def interference_lane_metrics_batch(nvdla_segs: list, *, llcs, drams,
             n_seg = c.shape[0]
             lane_hits = int(hits[row, :n_seg].sum())
             runs = _lane_miss_runs(b, s, c, llcs[i], cold[row],
-                                   miss_bits[row])
+                                   miss_bits[row],
+                                   full_prefix=lane_sels[i] is not None)
             accesses = int(c.sum())
             run_total = int(runs[1].sum())
             if run_total != accesses - lane_hits:

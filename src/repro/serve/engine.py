@@ -51,6 +51,7 @@ from repro.models import (
 from repro.serve.kvcache import PagedKVCache
 from repro.serve.oracle import SoCLatencyOracle
 from repro.types import param_values
+from repro.utils.stats import nearest_rank
 
 
 # --------------------------------------------------------------------------
@@ -125,12 +126,11 @@ class StepResult:
                    llc_hit_rate=None if hr is None else float(hr))
 
 
-def _nearest_rank(sorted_vals: list[float], q: float) -> float:
-    """Nearest-rank percentile — no interpolation, JSON/bit-stable."""
-    if not sorted_vals:
-        return 0.0
-    k = max(1, -(-int(q * len(sorted_vals)) // 100))
-    return sorted_vals[min(k, len(sorted_vals)) - 1]
+# Nearest-rank percentile — no interpolation, JSON/bit-stable.  The
+# shared implementation lives in repro.utils.stats (the QoS benchmarks
+# report the same statistic); the old inline version truncated q*n
+# before the ceiling division, off by one for fractional q.
+_nearest_rank = nearest_rank
 
 
 @dataclasses.dataclass(frozen=True)

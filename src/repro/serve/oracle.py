@@ -36,6 +36,11 @@ from repro.serve.kvcache import KV_REGION, STATE_REGION, PagedKVCache
 
 SOC_FREQ_HZ = 3.2e9      # shared CPU/NVDLA clock in the paper's config
 
+# every accelerator backend the oracle can lower a step's weight stream
+# for — benchmarks/serve_bench.py sweeps all of them, and
+# tests/test_serve_bench.py pins that coverage
+SUPPORTED_BACKENDS = ("nvdla", "npu")
+
 
 @dataclasses.dataclass(frozen=True)
 class StepLatency:
@@ -71,9 +76,9 @@ class SoCLatencyOracle:
                  freq_hz: float = SOC_FREQ_HZ,
                  weight_bytes: int | None = None,
                  backend: str = "nvdla", npu=None):
-        if backend not in ("nvdla", "npu"):
+        if backend not in SUPPORTED_BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; the oracle "
-                             "speaks 'nvdla' and 'npu'")
+                             f"speaks {', '.join(SUPPORTED_BACKENDS)}")
         if npu is not None and backend != "npu":
             raise ValueError("npu= only applies to backend='npu'")
         self.ws = working_set

@@ -1,0 +1,53 @@
+"""Serving benchmark coverage: every oracle backend gets a load sweep.
+
+The gap this pins: the NPU backend landed in the latency oracle but the
+serving benchmark only swept NVDLA, so NPU serving regressions were
+invisible.  The bench now derives its backend list from the oracle's
+``SUPPORTED_BACKENDS`` — these tests fail if a new backend reaches the
+oracle without reaching the bench, or if the bench's sweep loop stops
+consuming the shared constant.
+"""
+from __future__ import annotations
+
+import inspect
+
+import pytest
+
+from repro.serve.oracle import SUPPORTED_BACKENDS, SoCLatencyOracle
+
+
+def test_oracle_supported_backends_is_exhaustive():
+    assert SUPPORTED_BACKENDS == ("nvdla", "npu")
+    with pytest.raises(ValueError, match="unknown backend"):
+        from repro.configs import get_smoke_config
+        from repro.models import decode_working_set
+
+        SoCLatencyOracle(decode_working_set(get_smoke_config("qwen2-0.5b")),
+                         backend="tpu")
+
+
+def test_oracle_constructs_for_every_backend():
+    from repro.configs import get_smoke_config
+    from repro.models import decode_working_set
+
+    ws = decode_working_set(get_smoke_config("qwen2-0.5b"))
+    for backend in SUPPORTED_BACKENDS:
+        oracle = SoCLatencyOracle(ws, backend=backend)
+        assert oracle.backend == backend
+        # each backend lowers a real weight stream for a 1-slot step
+        segs = oracle._weight_segments(slots=1)
+        assert segs and sum(s.count for s in segs) > 0
+
+
+def test_bench_sweeps_every_supported_backend():
+    serve_bench = pytest.importorskip(
+        "benchmarks.serve_bench",
+        reason="benchmarks package needs the repo root on sys.path")
+
+    # the bench's backend list is the oracle's, by construction …
+    assert serve_bench.BACKENDS == SUPPORTED_BACKENDS
+    # … and the sweep loop actually iterates it (not a stale literal)
+    src = inspect.getsource(serve_bench.run)
+    assert "for backend in BACKENDS" in src
+    assert inspect.signature(serve_bench._run_load_point).parameters[
+        "backend"].default == "nvdla"

@@ -1,0 +1,77 @@
+"""Nearest-rank percentiles: the shared quantile helper.
+
+Pins the ``serve/engine`` off-by-one fix: nearest-rank is
+``k = ceil(n * q / 100)`` clamped to [1, n] — the old inline form
+truncated ``q * n`` to int *before* the ceiling division, dropping a
+rank for fractional percentiles, and never clamped the degenerate
+windows (empty / single-element lists).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.utils.stats import latency_summary, nearest_rank
+
+
+class TestNearestRank:
+    def test_degenerate_windows(self):
+        assert nearest_rank([], 99) == 0.0
+        assert nearest_rank([5.0], 0) == 5.0
+        assert nearest_rank([5.0], 50) == 5.0
+        assert nearest_rank([5.0], 100) == 5.0
+
+    def test_exact_small_lists(self):
+        vals = [1.0, 2.0, 3.0, 4.0]
+        assert nearest_rank(vals, 25) == 1.0
+        assert nearest_rank(vals, 50) == 2.0
+        assert nearest_rank(vals, 75) == 3.0
+        assert nearest_rank(vals, 100) == 4.0
+        assert nearest_rank(vals, 1) == 1.0
+
+    def test_fractional_percentile_regression(self):
+        # ceil(3 * 33.35 / 100) = ceil(1.0005) = 2; the old
+        # int-truncate-then-divide form returned rank 1
+        assert nearest_rank([1.0, 2.0, 3.0], 33.35) == 2.0
+
+    def test_p99_on_small_samples_is_max(self):
+        # with n < 100 samples the 99th nearest-rank is the maximum
+        for n in (1, 2, 10, 99):
+            vals = [float(i) for i in range(n)]
+            assert nearest_rank(vals, 99) == vals[-1]
+        vals = [float(i) for i in range(200)]
+        assert nearest_rank(vals, 99) == 197.0   # ceil(198.0) - 1
+
+    def test_latency_summary_fields(self):
+        s = latency_summary([3.0, 1.0, 2.0])
+        assert s == {"n": 3, "mean": 2.0, "p50": 2.0, "p99": 3.0,
+                     "wcet": 3.0}
+        assert latency_summary([]) == {"n": 0, "mean": 0.0, "p50": 0.0,
+                                       "p99": 0.0, "wcet": 0.0}
+
+
+class TestNearestRankProperties:
+    def test_properties(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, strategies as st
+
+        finite = st.floats(allow_nan=False, allow_infinity=False,
+                           width=32)
+
+        @given(st.lists(finite, min_size=1, max_size=50),
+               st.floats(0, 100), st.floats(0, 100))
+        def check(vals, q1, q2):
+            vals = sorted(vals)
+            r1, r2 = nearest_rank(vals, q1), nearest_rank(vals, q2)
+            assert r1 in vals                      # membership
+            if q1 <= q2:
+                assert r1 <= r2                    # monotone in q
+            assert nearest_rank(vals, 100) == vals[-1]
+            assert nearest_rank(vals, 0) == vals[0]
+
+        check()
+
+    def test_engine_alias_is_shared_helper(self):
+        # the serving engine must not regrow a private copy
+        from repro.serve import engine
+
+        assert engine._nearest_rank is nearest_rank
